@@ -1,0 +1,41 @@
+"""Shared benchmark utilities.
+
+Every benchmark emits ``name,us_per_call,derived`` CSV rows via ``emit`` and
+returns a dict for the aggregate report.  REPRO_BENCH_SCALE scales workload
+sizes (1.0 = the defaults used in EXPERIMENTS.md; CI smoke can use 0.25).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def scaled(n: int, lo: int = 1) -> int:
+    return max(lo, int(n * SCALE))
+
+
+def emit(name: str, us_per_call: float, **derived):
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+
+
+def save_json(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6      # us

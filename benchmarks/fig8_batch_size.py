@@ -1,0 +1,84 @@
+"""E6 — paper Fig.5/Fig.8: time-domain convergence vs batch size.
+
+Claims under test:
+  1. Eq.24's predicted training time has an interior optimum: too-small
+     batches pay sync cost C2 per update, unwieldy batches starve updates;
+  2. the measured time-to-loss curve on this machine shows the same shape
+     once C1 (throughput) and C2 (per-step overhead) are fitted from
+     measured iteration times;
+  3. a faster system (higher C1) prefers a larger batch.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json, scaled
+from repro.configs import CIFAR_QUICK
+from repro.core import ISGDConfig, batch_model
+from repro.data import FCPRSampler, make_classification
+from repro.models import cnn_loss_fn, init_cnn
+from repro.optim import momentum
+from repro.train import train
+
+
+def run():
+    n = scaled(2400, lo=600)
+    data = make_classification(0, n, 16, 3, 10, noise=0.6)
+    import dataclasses
+    cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3, num_classes=10)
+    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)     # noqa: E731
+    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+    target_loss = 0.7
+
+    batch_sizes = [30, 60, 120, 300, 600]
+    measured = {}
+    iter_times = {}
+    for bs in batch_sizes:
+        sampler = FCPRSampler(data, batch_size=bs, seed=1)
+        steps = scaled(10, lo=5) * sampler.n_batches
+        t0 = time.perf_counter()
+        _, _, log, _ = train(
+            params0, loss_fn, momentum(0.9), sampler,
+            steps=min(steps, scaled(400, lo=120)), lr=0.05,
+            inconsistent=False,
+            isgd_cfg=ISGDConfig(n_batches=sampler.n_batches))
+        wall = np.array(log.wall)
+        psi = np.array(log.psi_bar)
+        hit = np.where(psi <= target_loss)[0]
+        measured[bs] = float(wall[hit[0]]) if len(hit) else float("inf")
+        # per-iteration time from the steady-state tail
+        its = np.diff(wall)
+        iter_times[bs] = float(np.median(its))
+
+    # fit Eq.21: t_iter = bs/C1 + C2 (least squares on measured iteration times)
+    bs_arr = np.array(batch_sizes, float)
+    t_arr = np.array([iter_times[b] for b in batch_sizes])
+    A = np.stack([bs_arr, np.ones_like(bs_arr)], axis=1)
+    (inv_c1, c2), *_ = np.linalg.lstsq(A, t_arr, rcond=None)
+    c1 = 1.0 / max(inv_c1, 1e-9)
+
+    predicted = batch_model.predicted_time_to_loss(
+        bs_arr, psi=0.02, c1=c1, c2=max(c2, 1e-4))
+    best_measured = min((v, k) for k, v in measured.items())[1]
+    best_predicted = int(bs_arr[int(np.argmin(predicted))])
+    opt_slow = batch_model.optimal_batch_size(0.02, c1=c1, c2=max(c2, 1e-4))
+    opt_fast = batch_model.optimal_batch_size(0.02, c1=c1 * 8, c2=max(c2, 1e-4))
+
+    emit("fig8_batch_size", np.median(t_arr) * 1e6,
+         fitted_C1_img_per_s=f"{c1:.0f}", fitted_C2_s=f"{max(c2,0):.4f}",
+         best_bs_measured=best_measured, best_bs_predicted=best_predicted,
+         faster_system_prefers_larger_batch=opt_fast >= opt_slow,
+         measured="|".join(f"{k}:{v:.1f}" for k, v in measured.items()))
+    save_json("fig8_batch_size", {
+        "measured_time_to_loss": measured,
+        "iter_times": iter_times, "c1": c1, "c2": float(c2),
+        "predicted": dict(zip(map(int, bs_arr), map(float, predicted))),
+        "opt_slow": opt_slow, "opt_fast": opt_fast})
+    return measured
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""E8 — kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only — their wall time is meaningless), so the timings reported here are the
+XLA reference paths; the kernels are asserted allclose against the oracles at
+benchmark shapes.  On TPU the same harness times the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, scaled, timeit
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.fused_xent import fused_xent, xent_ref
+from repro.kernels.ssd_scan import ssd_chunked_pallas, ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    out = {}
+    # fused xent — bench shape: 2048 tokens x 8k vocab (scaled)
+    N, d, V = scaled(2048, lo=256), 256, scaled(8192, lo=1024)
+    h = jax.random.normal(KEY, (N, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (d, V)) * 0.05
+    labels = jax.random.randint(jax.random.fold_in(KEY, 2), (N,), 0, V)
+    ref = jax.jit(lambda *a: xent_ref(*a, vocab_size=V))
+    us = timeit(ref, h, w, labels, iters=3)
+    kern = fused_xent(h[:256], w, labels[:256], vocab_size=V, bn=128, bv=512)
+    np.testing.assert_allclose(kern, xent_ref(h[:256], w, labels[:256],
+                                              vocab_size=V), rtol=1e-3, atol=1e-3)
+    emit("kernel_fused_xent", us, shape=f"{N}x{d}x{V}",
+         ref_path="xla", kernel_validated=True)
+    out["fused_xent"] = us
+
+    # flash attention — 8 heads x 1k seq
+    BH, S, hd = 8, scaled(1024, lo=256), 64
+    q = jax.random.normal(KEY, (BH, S, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (BH, S, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (BH, S, hd))
+    ref = jax.jit(lambda *a: attention_ref(*a, causal=True))
+    us = timeit(ref, q, k, v, iters=3)
+    kern = flash_attention(q[:2, :256], k[:2, :256], v[:2, :256],
+                           causal=True, bq=128, bk=128)
+    np.testing.assert_allclose(
+        kern, attention_ref(q[:2, :256], k[:2, :256], v[:2, :256],
+                            causal=True), rtol=2e-5, atol=2e-5)
+    emit("kernel_flash_attention", us, shape=f"{BH}x{S}x{hd}",
+         ref_path="xla", kernel_validated=True)
+    out["flash_attention"] = us
+
+    # SSD — mamba2-ish head block
+    b, S2, nh, hd2, ds = 2, scaled(512, lo=128), 8, 64, 64
+    x = jax.random.normal(KEY, (b, S2, nh, hd2))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 5), (b, S2, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 6), (nh,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(KEY, 7), (b, S2, 1, ds))
+    C = jax.random.normal(jax.random.fold_in(KEY, 8), (b, S2, 1, ds))
+    ref = jax.jit(lambda *a: ssd_ref(*a, chunk=128))
+    us = timeit(ref, x, dt, A, B, C, iters=3)
+    y1, s1 = ssd_chunked_pallas(x[:1, :128], dt[:1, :128], A, B[:1, :128],
+                                C[:1, :128], chunk=64)
+    y2, s2 = ssd_ref(x[:1, :128], dt[:1, :128], A, B[:1, :128], C[:1, :128],
+                     chunk=64)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    emit("kernel_ssd_scan", us, shape=f"{b}x{S2}x{nh}x{hd2}x{ds}",
+         ref_path="xla", kernel_validated=True)
+    out["ssd_scan"] = us
+    save_json("kernels_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

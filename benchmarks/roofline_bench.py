@@ -1,0 +1,79 @@
+"""E9/E10 — aggregate the dry-run + roofline JSONs into the EXPERIMENTS.md
+tables.  Reads experiments/dryrun/*.json (full-depth compiles: memory proof)
+and experiments/roofline/*.json (trip-honest extrapolated terms)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(pattern):
+    recs = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _key(r):
+    return (r["arch"], SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9)
+
+
+def markdown_table(recs, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | mesh | GFLOP/dev | HBM GB/dev | coll GB/dev | "
+             "compute ms | memory ms | coll ms | bottleneck | useful |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=_key):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['hlo_gflops']:.0f} | {r['hlo_gbytes']:.1f} | "
+            f"{r['collective_gbytes']:.2f} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    dry = [r for r in _load("experiments/dryrun/*.json")
+           if "16data" in r["mesh"]]
+    ana = _load("experiments/roofline/*.json")
+    pods = [r for r in _load("experiments/dryrun/*.json")
+            if "pod" in r["mesh"]]
+
+    n_dry = len({(r['arch'], r['shape']) for r in dry})
+    n_pod = len({(r['arch'], r['shape']) for r in pods})
+    emit("dryrun_singlepod_pairs", 0, passed=n_dry)
+    emit("dryrun_multipod_pairs", 0, passed=n_pod)
+
+    for r in sorted(ana, key=_key):
+        if r.get("fsdp", True) and r.get("inconsistent", True):
+            emit(f"roofline_{r['arch']}_{r['shape']}",
+                 max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                 bottleneck=r["bottleneck"],
+                 compute_ms=f"{r['compute_s']*1e3:.1f}",
+                 memory_ms=f"{r['memory_s']*1e3:.1f}",
+                 collective_ms=f"{r['collective_s']*1e3:.1f}",
+                 useful=f"{r['useful_flops_ratio']:.2f}")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_tables.md", "w") as f:
+        f.write(markdown_table(dry, "Dry-run (full depth, single pod; "
+                               "cost_analysis counts loop bodies once)") + "\n\n")
+        f.write(markdown_table(pods, "Dry-run (full depth, 2 pods)") + "\n\n")
+        f.write(markdown_table(
+            [r for r in ana if r.get("fsdp", True)],
+            "Roofline (trip-honest extrapolated, single pod)") + "\n")
+    save_json("roofline_summary", {
+        "singlepod_pairs": n_dry, "multipod_pairs": n_pod,
+        "analysis_pairs": len(ana)})
+    return dry, ana
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1,fig6,...]
+
+Emits ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+REPRO_BENCH_SCALE / REPRO_BENCH_RUNS control workload size.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig1_loss_traces, fig3_control_limit,
+                        fig6_inconsistent_training, fig8_batch_size,
+                        fig9_nesterov, kernels_bench, roofline_bench,
+                        table1_time_to_accuracy)
+
+ALL = {
+    "fig1": fig1_loss_traces.run,
+    "fig3": fig3_control_limit.run,
+    "fig6": fig6_inconsistent_training.run,
+    "table1": table1_time_to_accuracy.run,
+    "fig8": fig8_batch_size.run,
+    "fig9": fig9_nesterov.run,
+    "kernels": kernels_bench.run,
+    "roofline": roofline_bench.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            ALL[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""Batch-size vs time-domain convergence (paper §4.5, Fig.5/Fig.8).
+
+Plots (as text) the Eq.24 predicted training-time curve for two system
+configurations and reports the measured optimum on this machine.
+
+  PYTHONPATH=src python examples/batch_size_study.py
+"""
+import numpy as np
+
+from repro.core import batch_model as bm
+
+
+def ascii_curve(xs, ys, width=60, label=""):
+    ys = np.asarray(ys, float)
+    finite = np.isfinite(ys)
+    lo, hi = ys[finite].min(), ys[finite].max()
+    print(f"\n{label}  (min={lo:.1f}s at n_b={int(xs[np.nanargmin(ys)])})")
+    for x, y in zip(xs, ys):
+        if not np.isfinite(y):
+            bar = "∞"
+        else:
+            bar = "#" * max(1, int((y - lo) / max(hi - lo, 1e-9) * width))
+        print(f"  n_b={int(x):5d} |{bar}")
+
+
+def main():
+    cand = np.arange(100, 3100, 200)
+    # System 1: 4x TITAN X-class (paper's rig): ~3000 img/s, 0.1 s sync
+    t1 = bm.predicted_time_to_loss(cand, psi=0.02, c1=3000.0, c2=0.1)
+    # System 2: faster interconnect-bound system: 6000 img/s, 0.25 s sync
+    t2 = bm.predicted_time_to_loss(cand, psi=0.02, c1=6000.0, c2=0.25)
+    ascii_curve(cand, t1, label="System 1 (C1=3000 img/s, C2=0.1s)")
+    ascii_curve(cand, t2, label="System 2 (C1=6000 img/s, C2=0.25s)")
+    b1 = bm.optimal_batch_size(0.02, 3000.0, 0.1)
+    b2 = bm.optimal_batch_size(0.02, 6000.0, 0.25)
+    print(f"\noptimal batch: system1={b1}, system2={b2} "
+          f"(faster system ⇒ larger batch: {b2 >= b1})")
+
+
+if __name__ == "__main__":
+    main()

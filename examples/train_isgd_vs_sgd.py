@@ -1,0 +1,95 @@
+"""End-to-end driver (deliverable b): train a transformer LM with ISGD vs
+SGD on synthetic token data — the full production path (model zoo config,
+FCPR pipeline, ISGD controller, checkpointing) at a CPU-feasible scale.
+
+Default is a ~10M-param internlm2-family model for speed; pass --params 100
+to train a ~100M-param variant for a few hundred steps (the deliverable's
+"train ~100M model" configuration — expect a few hours on this 1-core CPU
+container; on a real TPU slice this is minutes).
+
+  PYTHONPATH=src python examples/train_isgd_vs_sgd.py --steps 200
+  PYTHONPATH=src python examples/train_isgd_vs_sgd.py --params 100 --steps 300
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ISGDConfig
+from repro.data import FCPRSampler, make_lm_tokens
+from repro.models import build_model
+from repro.optim import momentum
+from repro.train import checkpoints, make_train_step
+from repro.train.trainer import TrainLog
+
+
+def model_for(params_m: int):
+    base = get_config("internlm2_1_8b")
+    if params_m >= 100:
+        # ~100M: 12 layers, d=512, vocab 8k
+        return dataclasses.replace(base, num_layers=12, d_model=512,
+                                   num_heads=8, num_kv_heads=4, head_dim=64,
+                                   d_ff=2048, vocab_size=8192)
+    return dataclasses.replace(base, num_layers=4, d_model=256, num_heads=4,
+                               num_kv_heads=2, head_dim=64, d_ff=1024,
+                               vocab_size=4096)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--params", type=int, default=10, help="target M params")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--ckpt", default="experiments/e2e_lm.npz")
+    args = ap.parse_args()
+
+    cfg = model_for(args.params)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params0 = model.init(key, max_seq=args.seq)
+    n = sum(x.size for x in jax.tree.leaves(params0))
+    print(f"model: {cfg.name}-derived, {n/1e6:.1f}M params")
+
+    data = make_lm_tokens(0, n_seqs=64, seq_len=args.seq, vocab=cfg.vocab_size)
+    sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
+
+    results = {}
+    for name, inconsistent in (("sgd", False), ("isgd", True)):
+        init_fn, step_fn = make_train_step(
+            model.loss_fn, momentum(0.9), icfg, inconsistent=inconsistent,
+            lr_fn=lambda _: jnp.asarray(args.lr))
+        params = jax.tree.map(jnp.copy, params0)
+        state = init_fn(params)
+        log = TrainLog()
+        t0 = time.perf_counter()
+        for j in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
+            state, params, m = step_fn(state, params, batch)
+            log.append(jax.tree.map(np.asarray, m), time.perf_counter() - t0)
+            if (j + 1) % 20 == 0:
+                print(f"[{name}] step {j+1:4d} loss={log.losses[-1]:.4f} "
+                      f"ψ̄={log.psi_bar[-1]:.4f} accel={log.accelerated[-1]}")
+        results[name] = log
+        if name == "isgd":
+            checkpoints.save(args.ckpt, params,
+                             extra={"steps": args.steps, "arch": cfg.name})
+            print(f"checkpoint -> {args.ckpt}")
+
+    n_b = sampler.n_batches
+    print("\n=== ISGD vs SGD (final epoch mean ψ̄) ===")
+    for name, log in results.items():
+        print(f"  {name:5s}: ψ̄={np.mean(log.psi_bar[-n_b:]):.4f} "
+              f"wall={log.wall[-1]:.1f}s accel={sum(log.accelerated)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.analysis.roofline import (
+    V5E,
+    Roofline,
+    analyze,
+    collective_stats,
+    model_flops,
+)
+
+__all__ = ["V5E", "Roofline", "analyze", "collective_stats", "model_flops"]

@@ -1,0 +1,41 @@
+"""Analysis mode: make compiled-cost trip counts honest.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (verified in
+EXPERIMENTS.md §Roofline caveats), so a rolled ``lax.scan`` hides
+(trips−1)/trips of the real FLOPs/bytes.  Under ``analysis_mode()``:
+
+  * inner scans (attention q-chunks, loss chunks, SSD inter-chunk,
+    encoder stack) fully unroll, so their cost is counted exactly;
+  * the ISGD subproblem ``while_loop`` is replaced by a python-unrolled,
+    convergence-masked loop of exactly ``stop`` iterations (the paper's
+    early-stopping upper bound).
+
+The outer scan over layer blocks stays rolled — its cost is recovered by
+two-point extrapolation over n_blocks (analysis/roofline.extrapolate), which
+is exact because every block is shape-identical.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+def in_analysis_mode() -> bool:
+    return getattr(_state, "on", False)
+
+
+@contextlib.contextmanager
+def analysis_mode(on: bool = True):
+    prev = in_analysis_mode()
+    _state.on = on
+    try:
+        yield
+    finally:
+        _state.on = prev
+
+
+def scan_unroll() -> bool | int:
+    """Pass as lax.scan's ``unroll=`` for inner (non-block) scans."""
+    return True if in_analysis_mode() else 1

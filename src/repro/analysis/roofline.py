@@ -1,0 +1,157 @@
+"""Roofline analysis from a compiled dry-run artifact (DESIGN.md §7).
+
+compute_s    = HLO_FLOPs / (chips · 197e12)         [bf16 MXU peak, v5e]
+memory_s     = HLO_bytes / (chips · 819e9)          [HBM BW]
+collective_s = Σ collective bytes / (chips · 50e9)  [ICI per link]
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are NOT
+in cost_analysis — we parse the post-SPMD HLO text and apply a per-op byte
+model (all-reduce counts 2× operand for its reduce-scatter+all-gather phases;
+all-gather counts result bytes; reduce-scatter / all-to-all / permute count
+operand bytes).  The post-partitioning module is per-device, so sums are
+per-chip traffic.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _tuple_or_single_bytes(sig: str) -> int:
+    """Result signature may be a tuple '(f32[..], f32[..])' or single."""
+    return sum(_shape_bytes(s) for s in
+               re.findall(r"\w+\[[\d,]*\]", sig))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-kind traffic (bytes) + counts from post-SPMD HLO text."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # '%x = TYPE[SHAPE] op-name(OPERANDS...), ...'
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        result_sig, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue                        # counted at -start
+        result_bytes = _tuple_or_single_bytes(result_sig)
+        operand_bytes = sum(_shape_bytes(s) for s in
+                            re.findall(r"\w+\[[\d,]*\]", line[m.end():]))
+        if kind == "all-reduce":
+            traffic = 2 * result_bytes      # RS + AG phases
+        elif kind == "all-gather":
+            traffic = result_bytes
+        else:                               # RS / A2A / permute
+            traffic = operand_bytes or result_bytes
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += traffic
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # per device
+    hlo_gbytes: float            # per device
+    collective_gbytes: float     # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_gflops: float          # 6·N·D useful flops per device
+    useful_flops_ratio: float
+    collectives: dict = field(default_factory=dict)
+    memory_per_device_gb: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops_per_device: float = 0.0, hw: dict = V5E) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    cstats = collective_stats(text)
+    cbytes = sum(v["bytes"] for v in cstats.values())
+
+    compute_s = flops / hw["peak_flops"]
+    memory_s = bytes_ / hw["hbm_bw"]
+    collective_s = cbytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    per_dev_gb = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                  + mem.temp_size_in_bytes + mem.generated_code_size_in_bytes) / 1e9
+
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=bytes_ / 1e9,
+        collective_gbytes=cbytes / 1e9,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_gflops=model_flops_per_device / 1e9,
+        useful_flops_ratio=(model_flops_per_device / flops) if flops else 0.0,
+        collectives=cstats,
+        memory_per_device_gb=per_dev_gb,
+    )
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) per device per step-equivalent."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch          # one token per sequence
+        factor = 2.0
+    return factor * n_active * tokens / chips

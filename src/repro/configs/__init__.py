@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    LONG_CONTEXT_ARCHS,
+    InputShape,
+    ModelConfig,
+    get_config,
+    shape_applicable,
+)
+from repro.configs.paper_cnns import CIFAR_QUICK, LENET, ALEXNET_SMALL, PAPER_CNNS
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "LONG_CONTEXT_ARCHS", "InputShape",
+    "ModelConfig", "get_config", "shape_applicable",
+    "CIFAR_QUICK", "LENET", "ALEXNET_SMALL", "PAPER_CNNS",
+]

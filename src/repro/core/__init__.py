@@ -1,0 +1,14 @@
+from repro.core import batch_model, control, schedule
+from repro.core.isgd import (
+    ISGDConfig,
+    ISGDState,
+    consistent_step,
+    isgd_init,
+    isgd_step,
+    solve_subproblem,
+)
+
+__all__ = [
+    "ISGDConfig", "ISGDState", "isgd_init", "isgd_step", "consistent_step",
+    "solve_subproblem", "control", "schedule", "batch_model",
+]

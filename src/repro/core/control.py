@@ -1,0 +1,74 @@
+"""Statistical-process-control loss tracking (paper §4.1, Alg.1 lines 13–20).
+
+A fixed-length FIFO of the last ``n_b`` batch losses (one epoch under FCPR
+sampling) with O(1) running mean/std maintained via Σ and Σ² — the paper's
+"memory efficient" alternative to variance-reduction state.  The upper
+control limit is ψ̄ + kσ (k=3 by default, Eq. 15).
+
+During warm-up (fewer than ``n_b`` observed losses) the limit is +inf so the
+subproblem never triggers before one full epoch (Alg.1 line 22: iter > n).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossQueue(NamedTuple):
+    buf: jnp.ndarray        # (n_b,) f32 ring buffer
+    total: jnp.ndarray      # Σ losses in window
+    total_sq: jnp.ndarray   # Σ losses² in window
+    count: jnp.ndarray      # observed so far (saturates at n_b)
+    idx: jnp.ndarray        # ring position
+
+
+def init_queue(n_b: int) -> LossQueue:
+    return LossQueue(
+        buf=jnp.zeros((n_b,), jnp.float32),
+        total=jnp.zeros((), jnp.float32),
+        total_sq=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def push(q: LossQueue, loss) -> LossQueue:
+    """O(1) ring-buffer update: dequeue the stale loss, enqueue the new one."""
+    loss = jnp.asarray(loss, jnp.float32)
+    n_b = q.buf.shape[0]
+    old = q.buf[q.idx]
+    full = q.count >= n_b
+    total = q.total + loss - jnp.where(full, old, 0.0)
+    total_sq = q.total_sq + loss * loss - jnp.where(full, old * old, 0.0)
+    buf = q.buf.at[q.idx].set(loss)
+    return LossQueue(
+        buf=buf,
+        total=total,
+        total_sq=total_sq,
+        count=jnp.minimum(q.count + 1, n_b),
+        idx=(q.idx + 1) % n_b,
+    )
+
+
+def mean(q: LossQueue):
+    return q.total / jnp.maximum(q.count, 1).astype(jnp.float32)
+
+
+def std(q: LossQueue):
+    """Computed from the buffer (masked to observed entries) rather than the
+    Σ²−mean² identity — f32 cancellation makes the latter unusable once the
+    losses are small relative to their magnitude.  Still O(n_b) time with
+    O(n_b) memory, n_b = batches/epoch (a few hundred floats)."""
+    n_b = q.buf.shape[0]
+    m = mean(q)
+    valid = (jnp.arange(n_b) < q.count).astype(jnp.float32)
+    var = jnp.sum(valid * (q.buf - m) ** 2) / jnp.maximum(q.count, 1)
+    return jnp.sqrt(jnp.maximum(var, 0.0))
+
+
+def control_limit(q: LossQueue, k: float = 3.0):
+    """Upper control limit ψ̄ + kσ (Eq. 15); +inf until one full epoch."""
+    warm = q.count >= q.buf.shape[0]
+    return jnp.where(warm, mean(q) + k * std(q), jnp.inf)

@@ -1,0 +1,36 @@
+"""Loss-driven learning-rate schedule (paper §4.2 end / §5.2).
+
+Because ISGD iterations are inconsistent, the LR is keyed on the running
+average loss ψ̄ (Alg.1 line 19) instead of the iteration count.  The paper's
+AlexNet schedule: lr=0.015 for ψ̄∈[2.0,∞), 0.0015 for [1.2,2.0), 0.00015 for
+[0,1.2).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def loss_driven_lr(thresholds: Sequence[float], lrs: Sequence[float]):
+    """thresholds descending: lr = lrs[i] for psi_bar >= thresholds[i],
+    else lrs[-1].  len(lrs) == len(thresholds) + 1."""
+    assert len(lrs) == len(thresholds) + 1
+    th = jnp.asarray(thresholds, jnp.float32)
+    vals = jnp.asarray(lrs, jnp.float32)
+
+    def lr_fn(psi_bar):
+        psi_bar = jnp.asarray(psi_bar, jnp.float32)
+        idx = jnp.sum(psi_bar < th)       # how many thresholds we've dropped below
+        return vals[idx]
+
+    return lr_fn
+
+
+def constant_lr(lr: float):
+    def lr_fn(psi_bar):
+        return jnp.asarray(lr, jnp.float32)
+    return lr_fn
+
+
+ALEXNET_SCHEDULE = loss_driven_lr([2.0, 1.2], [0.015, 0.0015, 0.00015])

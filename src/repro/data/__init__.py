@@ -1,0 +1,16 @@
+from repro.data.fcpr import ExplicitBatches, FCPRSampler
+from repro.data.synthetic import (
+    cifar_like,
+    iid_batches,
+    imagenet_like,
+    make_classification,
+    make_lm_tokens,
+    mnist_like,
+    single_class_batches,
+)
+
+__all__ = [
+    "FCPRSampler", "ExplicitBatches", "make_classification", "mnist_like",
+    "cifar_like", "imagenet_like", "single_class_batches", "iid_batches",
+    "make_lm_tokens",
+]

@@ -1,0 +1,67 @@
+"""Fixed-Cycle Pseudo-Random (FCPR) sampling — the paper's §3.4.
+
+The dataset is permuted ONCE, sliced into n_d/n_b batches, and iteration j
+retrieves batch t = j mod (n_d/n_b) — a fixed ring.  Batch identity is
+therefore deterministic, which is what gives the ISGD loss queue its
+"one window = one epoch" semantics.
+
+``shuffle_quality`` < 1 deliberately under-shuffles the permutation
+(paper §3.3 "insufficient shuffling" form of Sampling Bias): only that
+fraction of elements participate in the permutation, the rest stay in
+class-sorted order.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+class FCPRSampler:
+    def __init__(self, arrays: Dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0, shuffle_quality: float = 1.0):
+        n = len(next(iter(arrays.values())))
+        for v in arrays.values():
+            assert len(v) == n
+        self.n_data = n
+        self.batch_size = batch_size
+        self.n_batches = n // batch_size
+        assert self.n_batches > 0
+        rng = np.random.RandomState(seed)
+        perm = np.arange(n)
+        if shuffle_quality >= 1.0:
+            rng.shuffle(perm)
+        elif shuffle_quality > 0.0:
+            k = int(n * shuffle_quality)
+            idx = rng.choice(n, size=k, replace=False)
+            sub = perm[idx].copy()
+            rng.shuffle(sub)
+            perm[idx] = sub
+        usable = self.n_batches * batch_size
+        self.arrays = {k: np.ascontiguousarray(v[perm[:usable]])
+                       for k, v in arrays.items()}
+
+    def batch_index(self, j: int) -> int:
+        """t = j mod (n_d / n_b) — the paper's fixed cycle."""
+        return j % self.n_batches
+
+    def __call__(self, j: int) -> Dict[str, np.ndarray]:
+        t = self.batch_index(j)
+        lo, hi = t * self.batch_size, (t + 1) * self.batch_size
+        return {k: v[lo:hi] for k, v in self.arrays.items()}
+
+
+class ExplicitBatches:
+    """Pre-built batches cycled in fixed order (for the Fig.1 controlled
+    experiments: single-class and i.i.d. batches)."""
+
+    def __init__(self, batches):
+        self.batches = list(batches)
+        self.n_batches = len(self.batches)
+        self.batch_size = len(next(iter(self.batches[0].values())))
+
+    def batch_index(self, j: int) -> int:
+        return j % self.n_batches
+
+    def __call__(self, j: int):
+        return self.batches[self.batch_index(j)]

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import gqa_flash, gqa_ref
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref", "gqa_flash", "gqa_ref"]

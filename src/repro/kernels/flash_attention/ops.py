@@ -1,0 +1,41 @@
+"""Model-facing wrapper: GQA layout -> flash kernel.
+
+Maps (B, S, H, hd) q and (B, S, K, hd) k/v onto the kernel's flattened
+(B·H, S, hd) layout; the shared KV head of each query-head group is
+expanded with a gather (broadcast, no HBM copy under XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gqa_flash(q, k, v, *, causal=True, window=None, bq=128, bk=128):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    of = flash_attention(qf, kf, vf, causal=causal, window=window,
+                         bq=bq, bk=bk, interpret=_use_interpret())
+    return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+def gqa_ref(q, k, v, *, causal=True, window=None):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    rep = H // K
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    of = attention_ref(qf, kf, vf, causal=causal, window=window)
+    return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

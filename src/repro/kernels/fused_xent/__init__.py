@@ -1,0 +1,5 @@
+from repro.kernels.fused_xent.kernel import fused_xent
+from repro.kernels.fused_xent.ops import fused_xent_sum, xent_ref_sum
+from repro.kernels.fused_xent.ref import xent_ref
+
+__all__ = ["fused_xent", "fused_xent_sum", "xent_ref", "xent_ref_sum"]

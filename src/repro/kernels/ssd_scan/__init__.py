@@ -1,0 +1,5 @@
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+from repro.kernels.ssd_scan.ops import ssd_chunked_pallas
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+__all__ = ["ssd_intra_chunk", "ssd_chunked_pallas", "ssd_ref"]

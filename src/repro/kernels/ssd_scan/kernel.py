@@ -1,0 +1,84 @@
+"""Mamba2 SSD intra-chunk Pallas kernel.
+
+Per grid cell (batch·chunk, head) the kernel computes, entirely in VMEM:
+  * the decay matrix L[i,j] = exp(cumsum(dA)_i − cumsum(dA)_j) (i ≥ j),
+  * the diagonal-block output Y_diag = ((C·Bᵀ) ⊙ L) · (x·dt),
+  * the chunk's boundary state  S = Σ_j exp(cum_last − cum_j)·(x·dt)_j ⊗ B_j,
+  * the chunk decay exp(cum_last).
+The O(S/chunk)-step inter-chunk recurrence runs in ops.py as a lax.scan over
+these per-chunk outputs (it is tiny: (nh, hd, ds) per step).
+
+Block shapes: x (cl, hd), B/C (cl, ds) — with cl=chunk≤256, hd=64, ds=128
+everything is 128-lane friendly and the three matmuls hit the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, state_ref, decay_ref, *, cl: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)   # (cl, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)    # (cl,)
+    A = a_ref[0]                                # scalar for this head
+    B = b_ref[0, :, 0, :].astype(jnp.float32)   # (cl, ds)
+    C = c_ref[0, :, 0, :].astype(jnp.float32)   # (cl, ds)
+
+    dA = dt * A                                 # (cl,)
+    cum = jnp.cumsum(dA)
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    xdt = x * dt[:, None]                       # (cl, hd)
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (cl, cl)
+    y = jax.lax.dot_general(CB * L, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (cl, hd)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    w = jnp.exp(cum[-1] - cum)                  # (cl,)
+    state = jax.lax.dot_general(xdt * w[:, None], B, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (hd, ds)
+    state_ref[0, 0] = state
+    decay_ref[...] = jnp.exp(cum[-1]).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(x, dt, A, B, C, *, interpret: bool = True):
+    """x: (N, cl, nh, hd); dt: (N, cl, nh); A: (nh,); B/C: (N, cl, nh, ds)
+    (groups pre-broadcast to heads).  N = batch·n_chunks.
+
+    Returns (y_diag (N, cl, nh, hd) f32, states (N, nh, hd, ds) f32,
+    decays (N, nh) f32)."""
+    N, cl, nh, hd = x.shape
+    ds = B.shape[-1]
+    grid = (N, nh)
+    y, states, decays = pl.pallas_call(
+        functools.partial(_ssd_kernel, cl=cl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cl, 1, hd), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, cl, 1), lambda n, h: (n, 0, h)),
+            pl.BlockSpec((1,), lambda n, h: (h,)),
+            pl.BlockSpec((1, cl, 1, ds), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, cl, 1, ds), lambda n, h: (n, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cl, 1, hd), lambda n, h: (n, 0, h, 0)),
+            pl.BlockSpec((1, 1, hd, ds), lambda n, h: (n, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda n, h: (n, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, cl, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((N, nh, hd, ds), jnp.float32),
+            jax.ShapeDtypeStruct((N, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, states, decays

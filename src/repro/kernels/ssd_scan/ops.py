@@ -1,0 +1,58 @@
+"""Jit'd wrapper: full SSD forward = Pallas intra-chunk kernel + lax.scan
+inter-chunk recurrence + off-diagonal contribution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int):
+    """Same contract as models.ssm.ssd_chunked.
+
+    x: (b, S, nh, hd); dt: (b, S, nh); A: (nh,); B/C: (b, S, G, ds).
+    -> (y (b, S, nh, hd) f32, final_state (b, nh, hd, ds) f32)
+    """
+    b, S, nh, hd = x.shape
+    G, ds = B.shape[-2], B.shape[-1]
+    cl = min(chunk, S)
+    nc = S // cl
+    assert nc * cl == S
+    rep = nh // G
+
+    Bh = jnp.repeat(B, rep, axis=-2)
+    Ch = jnp.repeat(C, rep, axis=-2)
+    xr = x.reshape(b * nc, cl, nh, hd)
+    dtr = dt.reshape(b * nc, cl, nh)
+    Br = Bh.reshape(b * nc, cl, nh, ds)
+    Cr = Ch.reshape(b * nc, cl, nh, ds)
+
+    y_diag, states, decays = ssd_intra_chunk(
+        xr, dtr, A, Br, Cr, interpret=_use_interpret())
+    y_diag = y_diag.reshape(b, nc, cl, nh, hd)
+    states = states.reshape(b, nc, nh, hd, ds)
+    decays = decays.reshape(b, nc, nh)
+
+    def step(state, inp):
+        s_n, d_n = inp
+        new = state * d_n[..., None, None] + s_n
+        return new, state
+
+    final_state, prevs = jax.lax.scan(
+        step, jnp.zeros((b, nh, hd, ds), jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(decays, 1, 0)))
+    prevs = jnp.moveaxis(prevs, 0, 1)                      # (b, nc, nh, hd, ds)
+
+    # off-diagonal: Y_off[i] = C_i · prev_state · exp(cum_i)
+    dA = (dtr * A).reshape(b, nc, cl, nh)
+    cum = jnp.cumsum(jnp.moveaxis(dA, -1, -2), axis=-1)     # (b, nc, nh, cl)
+    Y_off = jnp.einsum("bnihd,bnhpd,bnhi->bnihp",
+                       Cr.reshape(b, nc, cl, nh, ds).astype(jnp.float32),
+                       prevs, jnp.exp(cum))
+    y = (y_diag + Y_off).reshape(b, S, nh, hd)
+    return y, final_state

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the SSD kernel: repro.models.ssm.ssd_chunked is the
+reference implementation; re-exported here so kernel tests read naturally."""
+from repro.models.ssm import ssd_chunked as ssd_ref
+
+__all__ = ["ssd_ref"]

@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first backend init.  512 host devices stand in for 2 pods × 256 v5e chips.
+
+_DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) combination this lowers the
+appropriate step function (train_step w/ ISGD, prefill, or serve_step)
+against ShapeDtypeStruct inputs — no allocation — then ``.compile()``s it
+under the production mesh and records memory_analysis / cost_analysis /
+collective traffic for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k [--multi-pod] [--fsdp/--no-fsdp] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable
+from repro.core import ISGDConfig, isgd_init, isgd_step
+from repro.core.schedule import constant_lr
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import momentum
+from repro.sharding import activation_sharding, rules
+from repro.train.trainer import make_loss_and_grad
+
+
+def _mesh_name(mesh) -> str:
+    return "x".join(f"{mesh.shape[a]}{a}" for a in mesh.axis_names)
+
+
+def build_step(model, mesh, shape, *, inconsistent=True, fsdp=True,
+               isgd_stop=5, cache_shard="feature", micro=1):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings, donate)."""
+    cfg = model.cfg
+    key = jax.random.PRNGKey(0)
+    seq_shard = shape.kind != "train" and shape.global_batch == 1
+    max_seq = shape.seq_len if cfg.family == "encdec" else 4096
+    params_shapes = jax.eval_shape(partial(model.init, max_seq=max_seq), key)
+    p_sh = SH.params_shardings(mesh, params_shapes, fsdp=fsdp)
+
+    if shape.kind == "train":
+        rule = momentum(0.9)
+        icfg = ISGDConfig(n_batches=64, stop=isgd_stop)
+        lg = make_loss_and_grad(model.loss_fn, micro_batches=micro)
+        lr_fn = constant_lr(0.01)
+
+        def train_step(state, params, batch):
+            if inconsistent:
+                state, params, metrics = isgd_step(
+                    rule, icfg, lg, state, params, batch, lr_fn(0.0))
+            else:
+                from repro.core import consistent_step
+                state, params, metrics = consistent_step(
+                    rule, lg, state, params, batch, lr_fn(0.0))
+            return state, params, metrics["loss"]
+
+        state_shapes = jax.eval_shape(partial(isgd_init, rule, icfg),
+                                      params_shapes)
+        s_sh = SH.state_shardings(mesh, state_shapes, p_sh)
+        b_specs = model.input_specs(shape)
+        b_sh = SH.batch_shardings(mesh, b_specs)
+        return (train_step, (state_shapes, params_shapes, b_specs),
+                (s_sh, p_sh, b_sh), (s_sh, p_sh, None))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill_fn(params, batch)
+
+        b_specs = model.input_specs(shape)
+        b_sh = SH.batch_shardings(mesh, b_specs)
+        return (prefill_step, (params_shapes, b_specs), (p_sh, b_sh), None)
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        partial(model.init_cache, shape.global_batch, shape.seq_len))
+    c_sh = SH.cache_shardings(mesh, cache_shapes, seq_shard=seq_shard,
+                              mode=cache_shard)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_fn(params, cache, tokens)
+
+    tok = model.input_specs(shape)["tokens"]
+    t_sh = SH.batch_shardings(mesh, {"tokens": tok})["tokens"]
+    return (serve_step, (params_shapes, cache_shapes, tok),
+            (p_sh, c_sh, t_sh), (None, c_sh))
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod=False, fsdp=True,
+               inconsistent=True, out_dir="experiments/dryrun", quiet=False,
+               isgd_stop=5, tag="", cache_shard="feature", micro=1,
+               remat_policy="full"):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        if not quiet:
+            print(f"SKIP {arch} × {shape_name}: {reason}")
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = build_model(cfg, remat_policy=remat_policy)
+    t0 = time.time()
+    fn, arg_shapes, in_sh, out_sh = build_step(
+        model, mesh, shape, fsdp=fsdp, inconsistent=inconsistent,
+        isgd_stop=isgd_stop, cache_shard=cache_shard, micro=micro)
+
+    table = rules.activation_rule_table(
+        mesh, shape.global_batch,
+        seq_shard=(shape.kind != "train" and shape.global_batch == 1))
+    with mesh, activation_sharding(rules.make_constrain(mesh, table)):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mf = roofline.model_flops(cfg, shape, chips)
+    rl = roofline.analyze(compiled, arch=arch, shape=shape_name,
+                          mesh_name=_mesh_name(mesh), chips=chips,
+                          model_flops_per_device=mf)
+    mem = compiled.memory_analysis()
+    if not quiet:
+        print(f"PASS {arch} × {shape_name} × {rl.mesh}  "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"  mem/device: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"out={mem.output_size_in_bytes/1e9:.2f}GB")
+        print(f"  per-device: {rl.hlo_gflops:.1f} GFLOP, {rl.hlo_gbytes:.1f} GB "
+              f"HBM, {rl.collective_gbytes:.3f} GB collective")
+        print(f"  roofline: compute={rl.compute_s*1e3:.2f}ms "
+              f"memory={rl.memory_s*1e3:.2f}ms "
+              f"collective={rl.collective_s*1e3:.2f}ms -> {rl.bottleneck}-bound; "
+              f"useful-flops={rl.useful_flops_ratio:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        rec = dataclasses.asdict(rl)
+        rec.update(lower_s=t_lower, compile_s=t_compile, fsdp=fsdp,
+                   inconsistent=inconsistent, micro=micro,
+                   cache_shard=cache_shard,
+                   arg_gb=mem.argument_size_in_bytes / 1e9,
+                   temp_gb=mem.temp_size_in_bytes / 1e9)
+        fname = f"{arch}_{shape_name}_{rl.mesh}{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rl
+
+
+def _cfg_with_blocks(cfg, k: int):
+    """Config truncated to k layer-blocks (same pattern) for extrapolation."""
+    from repro.models.transformer import stack_plan
+    prefix, block, n_blocks = stack_plan(cfg)
+    repl = {"num_layers": cfg.first_dense + k * len(block)}
+    if cfg.family == "encdec":
+        # encoder layers scale with the same k (whisper: 1 enc layer per block)
+        repl["encoder_layers"] = max(1, k * cfg.encoder_layers // n_blocks)
+    return dataclasses.replace(cfg, **repl), n_blocks
+
+
+def analysis_one(arch: str, shape_name: str, *, multi_pod=False, fsdp=True,
+                 inconsistent=True, isgd_stop=5, out_dir="experiments/roofline",
+                 quiet=False, tag="", build_step_fn=None,
+                 cache_shard="feature", micro=1, remat_policy="full"):
+    """Trip-count-honest roofline terms via two-point extrapolation over
+    n_blocks (analysis/mode.py).  Records a Roofline JSON per pair."""
+    from repro.analysis.mode import analysis_mode
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        if not quiet:
+            print(f"SKIP {arch} × {shape_name}: {reason}")
+        return None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    builder = build_step_fn or build_step
+
+    raw = {}
+    for k in (1, 2):
+        cfg_k, n_blocks = _cfg_with_blocks(cfg, k)
+        model = build_model(cfg_k, remat_policy=remat_policy)
+        fn, arg_shapes, in_sh, out_sh = builder(
+            model, mesh, shape, fsdp=fsdp, inconsistent=inconsistent,
+            isgd_stop=isgd_stop, cache_shard=cache_shard, micro=micro)
+        table = rules.activation_rule_table(
+            mesh, shape.global_batch,
+            seq_shard=(shape.kind != "train" and shape.global_batch == 1))
+        with mesh, activation_sharding(rules.make_constrain(mesh, table)), \
+                analysis_mode():
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh).lower(*arg_shapes).compile()
+        cost = compiled.cost_analysis()
+        cstats = roofline.collective_stats(compiled.as_text())
+        raw[k] = dict(
+            flops=float(cost.get("flops", 0.0)),
+            bytes=float(cost.get("bytes accessed", 0.0)),
+            cbytes=float(sum(v["bytes"] for v in cstats.values())),
+            cstats=cstats,
+        )
+
+    def extrap(key):
+        return raw[1][key] + (n_blocks - 1) * (raw[2][key] - raw[1][key])
+
+    flops, bytes_, cbytes = extrap("flops"), extrap("bytes"), extrap("cbytes")
+    hw = roofline.V5E
+    compute_s = flops / hw["peak_flops"]
+    memory_s = bytes_ / hw["hbm_bw"]
+    collective_s = cbytes / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    mf = roofline.model_flops(cfg, shape, chips)
+    rl = roofline.Roofline(
+        arch=arch, shape=shape_name, mesh=_mesh_name(mesh), chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=bytes_ / 1e9,
+        collective_gbytes=cbytes / 1e9, compute_s=compute_s,
+        memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max(terms, key=terms.get),
+        model_gflops=mf / 1e9,
+        useful_flops_ratio=(mf / flops) if flops else 0.0,
+        collectives={k: {"count": raw[2]["cstats"][k]["count"],
+                         "bytes": raw[1]["cstats"][k]["bytes"]
+                         + (n_blocks - 1) * (raw[2]["cstats"][k]["bytes"]
+                                             - raw[1]["cstats"][k]["bytes"])}
+                     for k in raw[2]["cstats"]},
+    )
+    if not quiet:
+        print(f"ROOFLINE {arch} × {shape_name} × {rl.mesh}: "
+              f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+              f"collective={collective_s*1e3:.2f}ms -> {rl.bottleneck}-bound "
+              f"useful={rl.useful_flops_ratio:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        rec = dataclasses.asdict(rl)
+        rec.update(fsdp=fsdp, inconsistent=inconsistent, isgd_stop=isgd_stop,
+                   cache_shard=cache_shard, micro=micro,
+                   remat_policy=remat_policy)
+        with open(os.path.join(
+                out_dir, f"{arch}_{shape_name}_{rl.mesh}{tag}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--consistent", dest="inconsistent", action="store_false",
+                    help="lower the baseline (non-ISGD) train step")
+    ap.add_argument("--isgd-stop", type=int, default=5)
+    ap.add_argument("--cache-shard", default="feature",
+                    choices=["feature", "batch"],
+                    help="decode cache layout (§Perf lever)")
+    ap.add_argument("--micro", type=int, default=1,
+                    help="gradient-accumulation micro-batches (§Perf lever)")
+    ap.add_argument("--remat-policy", default="full",
+                    choices=["full", "tp_out"],
+                    help="activation-checkpoint policy (§Perf lever)")
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--mode", default="dryrun", choices=["dryrun", "analysis"],
+                    help="dryrun = full-depth lower+compile (deliverable e); "
+                         "analysis = trip-honest roofline extrapolation (g)")
+    args = ap.parse_args()
+    out_dir = args.out or ("experiments/dryrun" if args.mode == "dryrun"
+                           else "experiments/roofline")
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        pairs = [(a, s) for a in archs for s in shapes]
+
+    run = dryrun_one if args.mode == "dryrun" else analysis_one
+    failures = []
+    for arch, shape in pairs:
+        try:
+            run(arch, shape, multi_pod=args.multi_pod, fsdp=args.fsdp,
+                inconsistent=args.inconsistent, out_dir=out_dir,
+                isgd_stop=args.isgd_stop, tag=args.tag,
+                cache_shard=args.cache_shard, micro=args.micro,
+                remat_policy=args.remat_policy)
+        except Exception as e:  # noqa: BLE001 — report all failures at end
+            failures.append((arch, shape, repr(e)[:200]))
+            print(f"FAIL {arch} × {shape}: {e!r}"[:400])
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Sharding assignment for every dry-run argument pytree: params, ISGD
+optimizer state, input batches, and serving caches.
+
+All picks go through rules.pick_spec so non-divisible dims silently fall
+back to the next candidate (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(mesh: Mesh, specs: dict, *, seq_shard: bool = False):
+    """Input batch: batch dim over (pod, data); long-context fallback shards
+    the sequence dim over 'data' (context parallel)."""
+    dp = rules.batch_axes(mesh)
+    out = {}
+    for name, sds in specs.items():
+        shape = sds.shape
+        if name == "tokens":
+            cands = ([(None, "data")] if seq_shard else []) + \
+                [(dp, None), (None, "data"), (None, None)]
+        else:  # frontend embeds (B, n, d)
+            cands = [(dp, None, "model"), (dp, None, None),
+                     (None, None, "model"), (None, None, None)]
+        out[name] = _ns(mesh, rules.pick_spec(mesh, shape, cands))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cache_shapes, *, seq_shard: bool = False,
+                    mode: str = "feature"):
+    """Serving caches.  rank-5 = stacked attn KV / SSD state; rank-4 =
+    stacked MLA/conv or unstacked attn; scalars replicated.
+
+    mode="feature": shard kv-heads/head-dim over 'model' (paper-faithful
+    baseline layout — mirrors the weight sharding).
+    mode="batch": shard only the batch dim; caches replicated over 'model'
+    (the §Perf fix: avoids GSPMD reshard/involuntary-remat on the decode
+    attention contraction when kv-heads don't divide the model axis).
+    """
+    dp = rules.batch_axes(mesh)
+
+    def leaf(sds):
+        shape = sds.shape
+        r = len(shape)
+        if r == 5:
+            if mode == "batch":
+                cands = [(None, dp, None, None, None),
+                         (None, None, "data", None, None),
+                         (None,) * 5]
+            else:
+                cands = [(None, dp, None, None, "model"),
+                         (None, dp, None, "model", None),
+                         (None, None, "data", None, "model"),
+                         (None, None, "data", None, None),
+                         (None, None, None, None, "model"),
+                         (None,) * 5]
+        elif r == 4:
+            if mode == "batch":
+                cands = [(None, dp, None, None),
+                         (None, None, "data", None),
+                         (None,) * 4]
+            else:
+                cands = [(None, dp, None, "model"),
+                         (None, None, "data", "model"),
+                         (None, None, "data", None),
+                         (None, None, None, "model"),
+                         (None,) * 4]
+        elif r == 3:
+            cands = [(dp, None, "model"), (None, "data", "model"),
+                     (None, None, "model"), (None,) * 3]
+            if mode == "batch":
+                cands = [(dp, None, None), (None, "data", None), (None,) * 3]
+        elif r == 2:
+            cands = [(dp, None), (None, None)]
+        else:
+            return _ns(mesh, P())
+        if seq_shard:
+            # prefer sequence-sharded candidates first (B=1 long-context)
+            cands = [c for c in cands if "data" in c or c == (None,) * r] + cands
+        return _ns(mesh, rules.pick_spec(mesh, shape, cands))
+
+    return jax.tree.map(leaf, cache_shapes)
+
+
+def state_shardings(mesh: Mesh, state_shapes, params_shardings):
+    """ISGD state: `base` (velocity) shards exactly like its parameter;
+    queue/counters are replicated scalars."""
+    rep = _ns(mesh, P())
+    base = state_shapes.base
+    if not jax.tree.leaves(base):
+        base_sh = jax.tree.map(lambda _: rep, base)
+    else:
+        base_sh = jax.tree.map(lambda _, s: s, base, params_shardings)
+    rest = type(state_shapes)(
+        base=base_sh,
+        queue=jax.tree.map(lambda _: rep, state_shapes.queue),
+        iter=rep, accel_count=rep, sub_iters=rep,
+    )
+    return rest
+
+
+def params_shardings(mesh: Mesh, params_shapes, *, fsdp: bool = True):
+    return rules.params_shardings(mesh, params_shapes, fsdp=fsdp)

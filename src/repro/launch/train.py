@@ -1,0 +1,108 @@
+"""Distributed training launcher.
+
+On real TPU hardware this runs the ISGD train loop under the production
+mesh; on this CPU container it runs reduced configs under a host mesh so the
+whole path (sharded params, pjit'd ISGD step with its cond/while_loop,
+loss-driven LR) is exercised end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --reduced --steps 30 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import ISGDConfig, isgd_init, isgd_step
+from repro.core.schedule import constant_lr
+from repro.data import FCPRSampler, make_lm_tokens
+from repro.launch import shardings as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import RULES
+from repro.sharding import activation_sharding, rules
+from repro.train.trainer import make_loss_and_grad
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant (CPU)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--rule", default="momentum", choices=list(RULES))
+    ap.add_argument("--consistent", action="store_true")
+    ap.add_argument("--k-sigma", type=float, default=2.0)
+    ap.add_argument("--stop", type=int, default=3)
+    ap.add_argument("--n-seqs", type=int, default=64)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={mesh.size}")
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, max_seq=args.seq)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+
+    data = make_lm_tokens(0, args.n_seqs, args.seq, cfg.vocab_size)
+    sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
+
+    rule = RULES[args.rule]()
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=args.k_sigma,
+                      stop=args.stop)
+    lg = make_loss_and_grad(model.loss_fn)
+    lr_fn = constant_lr(args.lr)
+
+    def step(state, params, batch):
+        if args.consistent:
+            from repro.core import consistent_step
+            return consistent_step(rule, lg, state, params, batch, lr_fn(0.0))
+        return isgd_step(rule, icfg, lg, state, params, batch, lr_fn(0.0))
+
+    p_sh = SH.params_shardings(mesh, jax.eval_shape(lambda: params))
+    state = isgd_init(rule, icfg, params)
+    s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
+    table = rules.activation_rule_table(mesh, args.batch)
+    with mesh, activation_sharding(rules.make_constrain(mesh, table)):
+        params = jax.device_put(params, p_sh)
+        state = jax.device_put(state, s_sh)
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        t0 = time.perf_counter()
+        for j in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
+            if cfg.family == "vlm":
+                batch["frontend_embeds"] = jnp.zeros(
+                    (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.family == "encdec":
+                batch["frontend_embeds"] = jnp.zeros(
+                    (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            state, params, m = jstep(state, params, batch)
+            if (j + 1) % 5 == 0 or j == 0:
+                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                      f"psi_bar={float(m['psi_bar']):.4f} "
+                      f"limit={float(m['limit']):.4f} "
+                      f"accel={bool(m['accelerated'])}")
+        dt = time.perf_counter() - t0
+        print(f"done: {args.steps} steps in {dt:.1f}s "
+              f"({dt/args.steps*1e3:.0f} ms/step) "
+              f"accelerated={int(state.accel_count)} "
+              f"sub_iters={int(state.sub_iters)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.api import Model, build_model
+from repro.models.cnn import cnn_accuracy, cnn_logits, cnn_loss_fn, init_cnn
+
+__all__ = ["Model", "build_model", "init_cnn", "cnn_logits", "cnn_loss_fn",
+           "cnn_accuracy"]

@@ -1,0 +1,74 @@
+"""Unified model API: every architecture exposes the same surface.
+
+``build_model(cfg)`` -> ``Model`` with:
+  init(key, shape)           -> params (real arrays; use jax.eval_shape for abstract)
+  loss_fn(params, batch)     -> (total_loss, data_loss)   [train]
+  prefill_fn(params, batch)  -> (last logits, caches)     [inference-prefill]
+  decode_fn(params, cache, tokens) -> (logits, cache)     [inference-decode]
+  init_cache(B, S)           -> zero caches
+  input_specs(shape)         -> {name: ShapeDtypeStruct} for train/prefill/decode
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+def _frontend_spec(cfg, B):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family in ("encdec", "audio"):
+        return jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def build_model(cfg: ModelConfig, *, remat: bool = True,
+                use_fused_xent: bool = False,
+                remat_policy: str = "full") -> Model:
+    def init(key, max_seq: int = 4096):
+        return T.init_params(key, cfg, max_seq=max_seq)
+
+    def loss_fn(params, batch):
+        return T.lm_loss_fn(params, cfg, batch, remat=remat,
+                            use_fused_xent=use_fused_xent,
+                            remat_policy=remat_policy)
+
+    def prefill_fn(params, batch):
+        return T.prefill(params, cfg, batch["tokens"],
+                         batch.get("frontend_embeds"))
+
+    def decode_fn(params, cache, tokens):
+        return T.decode_step(params, cfg, cache, tokens)
+
+    def init_cache(B, S):
+        return T.init_cache(cfg, B, S)
+
+    def input_specs(shape: InputShape):
+        B, S = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct(
+            (B, 1 if shape.kind == "decode" else S), jnp.int32)}
+        fe = _frontend_spec(cfg, B)
+        if fe is not None and shape.kind != "decode":
+            specs["frontend_embeds"] = fe
+        return specs
+
+    return Model(cfg, init, loss_fn, prefill_fn, decode_fn, init_cache,
+                 input_specs)

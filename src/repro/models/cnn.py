@@ -1,0 +1,88 @@
+"""The paper's benchmark CNNs (LeNet / CIFAR-quick / AlexNet-class) in pure
+JAX — used by the faithful ISGD reproduction (§5 of the paper).
+
+Loss matches the paper's Eq. 6: softmax cross entropy + (λ/2)·‖w‖² weight
+decay *inside* ψ, so the ISGD control limit sees exactly the quantity the
+paper monitors.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnns import CNNConfig
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale
+
+
+def init_cnn(key, cfg: CNNConfig):
+    params = {"convs": [], "dense": []}
+    cin = cfg.channels
+    size = cfg.image_size
+    for i, c in enumerate(cfg.convs):
+        key, k1 = jax.random.split(key)
+        params["convs"].append({
+            "w": _conv_init(k1, c.kernel, cin, c.features),
+            "b": jnp.zeros((c.features,), jnp.float32),
+        })
+        size = math.ceil(size / c.stride)
+        if c.pool:
+            size = math.ceil(size / c.pool_stride)
+        cin = c.features
+    feat = size * size * cin
+    dims = (feat,) + tuple(cfg.hidden) + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        params["dense"].append({
+            "w": jax.random.normal(k1, (dims[i], dims[i + 1]), jnp.float32)
+                 / math.sqrt(dims[i]),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        })
+    return params
+
+
+def cnn_logits(params, cfg: CNNConfig, images):
+    """images: (B, H, W, C) -> (B, num_classes)."""
+    x = images
+    for spec, p in zip(cfg.convs, params["convs"]):
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(spec.stride, spec.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p["b"])
+        if spec.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, spec.pool, spec.pool, 1),
+                (1, spec.pool_stride, spec.pool_stride, 1), "SAME")
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["dense"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["dense"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss_fn(params, cfg: CNNConfig, batch, weight_decay: float = 1e-4):
+    """Paper Eq.6: cross entropy + (λ/2)‖w‖²."""
+    logits = cnn_logits(params, cfg, batch["images"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = (lse - gold).mean()
+    l2 = 0.5 * weight_decay * sum(
+        jnp.sum(jnp.square(w)) for w in jax.tree.leaves(params))
+    return ce + l2, ce
+
+
+def cnn_accuracy(params, cfg: CNNConfig, images, labels, batch: int = 1000):
+    n = images.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        lg = cnn_logits(params, cfg, images[i:i + batch])
+        correct += int((jnp.argmax(lg, -1) == labels[i:i + batch]).sum())
+    return correct / n

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style capacity dispatch.
+
+TPU-native design (DESIGN.md §3): tokens are processed in groups of
+``GROUP_SIZE``; within each group, one-hot dispatch/combine tensors of shape
+(g, E, C) route tokens to per-expert buffers.  The dispatch tensor size is
+g·topk·cf per token — independent of the expert count — so DeepSeek-V2's 64
+experts cost the same routing memory as Mixtral's 8.  The expert dimension is
+sharded over the "model" mesh axis when divisible (expert parallelism ⇒
+all-to-all under GSPMD); otherwise the per-expert hidden dim is sharded
+(the Mixtral 8-expert fallback).
+
+Router load-balancing uses the standard auxiliary loss (Switch §2.2) — the
+mean over experts of (fraction of tokens routed) × (mean router prob).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+GROUP_SIZE = 128
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wg": dense_init(ks[1], (E, d, ff), dtype),
+        "wi": dense_init(ks[2], (E, d, ff), dtype),
+        "wo": dense_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        p["swg"] = dense_init(ks[4], (d, sff), dtype)
+        p["swi"] = dense_init(ks[5], (d, sff), dtype)
+        p["swo"] = dense_init(ks[6], (sff, d), dtype)
+    return p
+
+
+def _capacity(g: int, top_k: int, num_experts: int, cf: float) -> int:
+    c = int(g * top_k * cf / num_experts)
+    return max(4, min(g, c))
+
+
+def _route_group(params, x, top_k: int, num_experts: int, cf: float = 1.25):
+    """x: (g, d) one token group -> (y, aux_loss)."""
+    g, d = x.shape
+    E = num_experts
+    C = _capacity(g, top_k, E, cf)
+    logits = (x.astype(jnp.float32) @ params["router"])          # (g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)          # (g, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) slot inside its expert's buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)      # (g, k, E)
+    flat = onehot.reshape(g * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                        # (g*k, E)
+    pos = (pos * flat).sum(-1).reshape(g, top_k)                 # (g, k)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # dispatch (g, E, C) / combine (g, E, C)
+    disp = (jax.nn.one_hot(expert_idx, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., :C][:, :, None, :])
+    disp = disp.sum(1)                                           # (g, E, C)
+    comb = (gate_vals[..., None, None].astype(x.dtype)
+            * jax.nn.one_hot(expert_idx, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., :C][:, :, None, :])
+    comb = comb.sum(1)                                           # (g, E, C)
+
+    xe = jnp.einsum("gec,gd->ecd", disp, x)                      # (E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, params["wi"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["wo"])             # (E, C, d)
+    y = jnp.einsum("gec,ecd->gd", comb, ye)
+
+    # Switch aux load-balance loss
+    me = probs.mean(0)                                           # mean prob per expert
+    ce = jax.nn.one_hot(expert_idx[:, 0], E).mean(0)             # top-1 routed fraction
+    aux = E * jnp.sum(me * ce)
+    return y, aux
+
+
+def moe_forward(params, cfg, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    g = min(GROUP_SIZE, S)
+    tokens = x.reshape(B * S // g, g, d)
+    y, aux = jax.vmap(lambda t: _route_group(
+        params, t, cfg.top_k, cfg.num_experts, cfg.moe_capacity_factor))(tokens)
+    y = y.reshape(B, S, d)
+    if cfg.num_shared_experts:
+        h = jax.nn.silu(x @ params["swg"]) * (x @ params["swi"])
+        y = y + h @ params["swo"]
+    return y, aux.mean()
+
+
+def moe_decode(params, cfg, x):
+    """Decode-time MoE for a single position: dense gather-free top-k.
+
+    x: (B, 1, d).  At batch sizes ~128 a dispatch over the batch is fine.
+    """
+    B, _, d = x.shape
+    y, aux = _route_group(params, x.reshape(B, d), cfg.top_k, cfg.num_experts,
+                          cfg.moe_capacity_factor)
+    y = y.reshape(B, 1, d)
+    if cfg.num_shared_experts:
+        h = jax.nn.silu(x @ params["swg"]) * (x @ params["swi"])
+        y = y + h @ params["swo"]
+    return y, aux

@@ -1,0 +1,3 @@
+from repro.optim.base import RULES, UpdateRule, momentum, nesterov, sgd
+
+__all__ = ["RULES", "UpdateRule", "sgd", "momentum", "nesterov"]

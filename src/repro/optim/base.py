@@ -1,0 +1,144 @@
+"""Base first-order update rules (the paper's baselines, §2/§4.3).
+
+Each rule is a pair of pure functions so ISGD can wrap any of them by
+swapping only the base update (paper Alg.1 line 21):
+
+  init(params)                         -> state
+  apply(state, params, grads, lr)     -> (state, params)
+
+Update rules follow the paper's equations exactly:
+  SGD       w' = w - lr * g                              (Eq. 4)
+  Momentum  v' = mu*v - lr*g ; w' = w + v'               (Eq. 19)
+  Nesterov  v' = mu*v - lr*g(w + mu*v) ; w' = w + v'     (Eq. 20)
+
+Nesterov is implemented in the standard "lookahead-free" transformed form so
+the gradient is always evaluated at the current iterate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _tree_update(params, grads, fn):
+    return jax.tree.map(fn, params, grads)
+
+
+@dataclass(frozen=True)
+class UpdateRule:
+    name: str
+    init: Callable
+    apply: Callable          # (state, params, grads, lr) -> (state, params)
+
+
+def sgd(weight_decay: float = 0.0) -> UpdateRule:
+    def init(params):
+        return ()
+
+    def apply(state, params, grads, lr):
+        def upd(w, g):
+            g = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - lr * g).astype(w.dtype)
+        return state, _tree_update(params, grads, upd)
+
+    return UpdateRule("sgd", init, apply)
+
+
+def momentum(mu: float = 0.9, weight_decay: float = 0.0) -> UpdateRule:
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def apply(vel, params, grads, lr):
+        def upd_v(v, g, w):
+            g = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            return mu * v - lr * g
+        new_vel = jax.tree.map(upd_v, vel, grads, params)
+        new_params = jax.tree.map(
+            lambda w, v: (w.astype(jnp.float32) + v).astype(w.dtype),
+            params, new_vel)
+        return new_vel, new_params
+
+    return UpdateRule("momentum", init, apply)
+
+
+def nesterov(mu: float = 0.9, weight_decay: float = 0.0) -> UpdateRule:
+    """Nesterov accelerated gradient in the Sutskever transformed form:
+    v' = mu*v - lr*g(w);  w' = w + mu*v' - lr*g(w)."""
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def apply(vel, params, grads, lr):
+        def upd(w, v, g):
+            g = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            v_new = mu * v - lr * g
+            w_new = w.astype(jnp.float32) + mu * v_new - lr * g
+            return w_new.astype(w.dtype), v_new
+        out = jax.tree.map(upd, params, vel, grads)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_vel = jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return new_vel, new_params
+
+    return UpdateRule("nesterov", init, apply)
+
+
+def adagrad(eps: float = 1e-8, weight_decay: float = 0.0) -> UpdateRule:
+    """Duchi et al. — the adaptive baseline the paper contrasts with (§2).
+    ISGD composes with it like any base rule: the controller adjusts the
+    FREQUENCY of a batch's updates, Adagrad the per-parameter magnitude."""
+    def init(params):
+        return jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+    def apply(acc, params, grads, lr):
+        def upd(a, w, g):
+            g = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            a_new = a + g * g
+            w_new = w.astype(jnp.float32) - lr * g / (jnp.sqrt(a_new) + eps)
+            return a_new, w_new.astype(w.dtype)
+        out = jax.tree.map(upd, acc, params, grads)
+        new_acc = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree.map(lambda t: t[1], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        return new_acc, new_params
+
+    return UpdateRule("adagrad", init, apply)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> UpdateRule:
+    """AdamW-style decoupled weight decay; state = (m, v, t)."""
+    def init(params):
+        zeros = lambda w: jnp.zeros(w.shape, jnp.float32)   # noqa: E731
+        return (jax.tree.map(zeros, params), jax.tree.map(zeros, params),
+                jnp.zeros((), jnp.int32))
+
+    def apply(state, params, grads, lr):
+        m, v, t = state
+        t = t + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(mi, vi, w, g):
+            g = g.astype(jnp.float32)
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            w_new = w.astype(jnp.float32) - step \
+                - lr * weight_decay * w.astype(jnp.float32)
+            return mi, vi, w_new.astype(w.dtype)
+
+        out = jax.tree.map(upd, m, v, params, grads)
+        pick = lambda i: jax.tree.map(lambda tpl: tpl[i], out,   # noqa: E731
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return (pick(0), pick(1), t), pick(2)
+
+    return UpdateRule("adam", init, apply)
+
+
+RULES = {"sgd": sgd, "momentum": momentum, "nesterov": nesterov,
+         "adagrad": adagrad, "adam": adam}

@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, merge_prefill_cache
+
+__all__ = ["ServeEngine", "merge_prefill_cache"]

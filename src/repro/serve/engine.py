@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill -> KV cache -> greedy decode loop.
+
+The prefill pass emits per-layer cache entries sized to the prompt; they are
+scattered into the preallocated max_seq cache buffers (generic rule: the
+first axis whose size differs is the sequence axis; SSM conv/state entries
+match exactly and are copied through).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _merge_entry(buf, new):
+    """Write a prefill cache array into its preallocated buffer."""
+    if buf.shape == new.shape:
+        return new.astype(buf.dtype)
+    assert len(buf.shape) == len(new.shape), (buf.shape, new.shape)
+    # first differing axis = sequence axis
+    axis = next(i for i, (a, b) in enumerate(zip(buf.shape, new.shape))
+                if a != b)
+    start = tuple(jnp.zeros((), jnp.int32) for _ in buf.shape)
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+
+
+def merge_prefill_cache(cache, prefill_caches):
+    """cache: from model.init_cache; prefill_caches: (prefix, blocks)."""
+    prefix_new, blocks_new = prefill_caches
+    merged_prefix = [
+        tuple(_merge_entry(b, n) for b, n in zip(be, ne))
+        for be, ne in zip(cache["prefix"], prefix_new)
+    ]
+    merged_blocks = tuple(
+        tuple(_merge_entry(b, n) for b, n in zip(be, ne))
+        for be, ne in zip(cache["blocks"], blocks_new)
+    )
+    return {"prefix": merged_prefix, "blocks": merged_blocks,
+            "t": cache["t"]}
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_seq: int):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(model.prefill_fn)
+        self._decode = jax.jit(model.decode_fn, donate_argnums=(1,))
+
+    def _frontend(self, B):
+        cfg = self.model.cfg
+        if cfg.family == "vlm":
+            return jnp.zeros((B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            return jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return None
+
+    def generate(self, prompts: np.ndarray, steps: int) -> np.ndarray:
+        """prompts: (B, Sp) int32 -> (B, Sp+steps) greedy continuation."""
+        B, Sp = prompts.shape
+        assert Sp + steps <= self.max_seq
+        batch = {"tokens": jnp.asarray(prompts)}
+        fe = self._frontend(B)
+        if fe is not None:
+            batch["frontend_embeds"] = fe
+        logits, pre_caches = self._prefill(self.params, batch)
+        cache = self.model.init_cache(B, self.max_seq)
+        cache = merge_prefill_cache(cache, pre_caches)
+        cache["t"] = jnp.asarray(Sp, jnp.int32)
+
+        toks = [jnp.argmax(logits[:, :self.model.cfg.vocab_size], -1)]
+        for _ in range(steps - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         toks[-1][:, None].astype(jnp.int32))
+            toks.append(jnp.argmax(logits[:, :self.model.cfg.vocab_size], -1))
+        gen = np.stack([np.asarray(t) for t in toks], axis=1)
+        return np.concatenate([prompts, gen], axis=1)

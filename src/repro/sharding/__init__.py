@@ -1,0 +1,4 @@
+from repro.sharding.ctx import activation_sharding, constrain
+from repro.sharding import rules  # noqa: F401
+
+__all__ = ["constrain", "activation_sharding", "rules"]

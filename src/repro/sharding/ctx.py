@@ -1,0 +1,38 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain(x, kind)`` at a few canonical points ("tokens",
+"hidden", "logits", "kv_cache", ...).  Outside a mesh context this is a
+no-op, so models stay mesh-agnostic; the launcher installs a rule table
+(kind -> PartitionSpec) for the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _current() -> Optional[Callable]:
+    return getattr(_state, "fn", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable):
+    """fn(x, kind) -> x (typically jax.lax.with_sharding_constraint)."""
+    prev = _current()
+    _state.fn = fn
+    try:
+        yield
+    finally:
+        _state.fn = prev
+
+
+def constrain(x, kind: str):
+    fn = _current()
+    if fn is None:
+        return x
+    return fn(x, kind)

@@ -1,0 +1,171 @@
+"""Logical -> physical sharding rules with divisibility fallbacks.
+
+``param_spec(path, leaf, mesh_axes)`` maps every parameter leaf to a
+PartitionSpec; ``activation_rules(...)`` builds the constrain() table used by
+the launcher.  The rule engine is dumb on purpose: try the preferred axes in
+order, keep the first whose dim is divisible by the mesh axis size, else
+replicate — that single rule absorbs every oddity in the assigned archs
+(mixtral's 8 experts vs model=16, starcoder2's kv=2, whisper's odd vocab).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def pick_spec(mesh: Mesh, shape: Sequence[int], candidates) -> P:
+    """First candidate PartitionSpec whose sharded dims all divide evenly."""
+    for spec in candidates:
+        ok = True
+        for dim, axis in zip(shape, spec):
+            if axis is None:
+                continue
+            if dim % _axis_size(mesh, axis) != 0:
+                ok = False
+                break
+        if ok:
+            return P(*spec)
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# parameter rules — Megatron row/column tensor parallelism + ZeRO over 'data'
+# ---------------------------------------------------------------------------
+# Projections that CONSUME a model-sharded activation (FFN down-proj,
+# attention output, SSM output) are ROW-parallel: contraction dim on
+# 'model', output resolved by a single all-reduce.  Everything else is
+# COLUMN-parallel (output features on 'model').  Getting this wrong
+# all-gathers the d_ff-wide hidden every layer — see EXPERIMENTS.md §Perf.
+_ROW_PARALLEL = ("wo", "out_proj", "swo")
+
+
+def _is_row(path: str) -> bool:
+    leaf = path.rsplit("/", 1)[-1].strip("[]'\"")
+    return leaf in _ROW_PARALLEL
+
+
+def param_spec(mesh: Mesh, path: str, shape, *, fsdp: bool = True) -> P:
+    nd = len(shape)
+    d = "data" if fsdp else None
+    if nd == 0 or max(shape) < 128:
+        return P()
+    if "embed" in path or "head" in path:
+        # (V, d) or (d, V): shard vocab over model, other dim over data
+        big = 0 if shape[0] >= shape[-1] else nd - 1
+        cands = []
+        if nd == 2:
+            if big == 0:
+                cands = [("model", d), ("model", None), (None, d), (None, None)]
+            else:
+                cands = [(d, "model"), (None, "model"), (d, None), (None, None)]
+        return pick_spec(mesh, shape, cands)
+    if "pos_embed" in path or "enc_pos" in path:
+        return pick_spec(mesh, shape, [(None, "model"), (None, None)])
+    if nd == 1:
+        return P()
+    row = _is_row(path)
+    if nd == 2:
+        if row:
+            return pick_spec(mesh, shape, [
+                ("model", d), ("model", None), (None, d), (None, None)])
+        return pick_spec(mesh, shape, [
+            (d, "model"), (None, "model"), (d, None), (None, None)])
+    if nd == 3:
+        # stacked blocks (n_blocks, in, out)
+        if row:
+            return pick_spec(mesh, shape, [
+                (None, "model", d), (None, "model", None), (None, None, d),
+                (None, None, None)])
+        return pick_spec(mesh, shape, [
+            (None, d, "model"), (None, None, "model"), (None, d, None),
+            (None, None, None)])
+    if nd == 4:
+        # (n_blocks, E, in, out): expert-parallel over 'model' when divisible
+        # (within-expert dims then use 'data'); else row/col over 'model'.
+        if row:
+            return pick_spec(mesh, shape, [
+                (None, "model", d, None), (None, None, "model", d),
+                (None, None, "model", None), (None, None, None, None)])
+        return pick_spec(mesh, shape, [
+            (None, "model", d, None), (None, None, d, "model"),
+            (None, None, None, "model"), (None, None, None, None)])
+    return P()
+
+
+def params_shardings(mesh: Mesh, params_shapes, *, fsdp: bool = True):
+    """Map a pytree of ShapeDtypeStruct -> pytree of NamedSharding."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(k) for k in path)
+        spec = param_spec(mesh, pstr, leaf.shape, fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, [s for s in out])
+
+
+# ---------------------------------------------------------------------------
+# activation / input rules
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_specs(mesh: Mesh, global_batch: int, *, seq_shard: bool = False):
+    """PartitionSpecs for model inputs.
+
+    If the batch doesn't divide the dp axes (long_500k B=1), shard the
+    sequence dim over 'data' instead (context parallelism).
+    """
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if global_batch % dp_size == 0 and not seq_shard:
+        return P(dp, None), P(dp)
+    return P(None, "data"), P(None)
+
+
+def activation_rule_table(mesh: Mesh, global_batch: int, *, seq_shard=False):
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_ok = global_batch % dp_size == 0 and not seq_shard
+    b = dp if batch_ok else None
+    s = None if batch_ok else "data"
+    return {
+        "hidden": P(b, s, "model"),
+        "decode_hidden": P(b, None, "model"),
+        "logits": P(b, s, "model"),
+    }
+
+
+def make_constrain(mesh: Mesh, table):
+    def fn(x, kind):
+        spec = table.get(kind)
+        if spec is None:
+            return x
+        # drop axes that don't divide
+        fixed = []
+        for dim, axis in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+            if axis is not None and dim % _axis_size(mesh, axis) == 0:
+                fixed.append(axis)
+            else:
+                fixed.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+    return fn

@@ -1,0 +1,5 @@
+from repro.train import checkpoints
+from repro.train.trainer import TrainLog, make_loss_and_grad, make_train_step, train
+
+__all__ = ["make_train_step", "make_loss_and_grad", "train", "TrainLog",
+           "checkpoints"]

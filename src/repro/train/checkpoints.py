@@ -1,0 +1,51 @@
+"""Checkpointing: pure-numpy .npz of a flattened pytree + ISGD control state.
+
+No external deps (orbax etc.) — paths/keys are derived from the tree
+structure, so save/restore round-trips any params/opt-state pytree used in
+this framework, including the ISGD loss queue (so inconsistent training can
+resume with its control limit intact).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)       # npz can't store bf16
+        out[key] = arr
+    return out, treedef
+
+
+def save(path: str, tree, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, _ = _flatten(tree)
+    meta = {"keys": sorted(arrays.keys()), "extra": extra or {}}
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    data = np.load(path, allow_pickle=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(k) for k in p)
+        arr = data[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_extra(path: str) -> dict:
+    data = np.load(path, allow_pickle=False)
+    return json.loads(str(data["__meta__"]))["extra"]

@@ -1,0 +1,139 @@
+"""Training loop: wires model loss, base rule, ISGD controller, loss-driven
+LR schedule and the FCPR data pipeline together.
+
+``make_train_step`` builds the jitted step used both by the CPU reproduction
+benchmarks and (under pjit, via launch/train.py) the production mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp  # noqa: F401  (jnp.copy used below)
+
+from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
+from repro.core.schedule import constant_lr
+from repro.optim.base import UpdateRule
+
+
+def make_loss_and_grad(loss_fn: Callable, micro_batches: int = 1):
+    """loss_fn(params, batch) -> (total_loss, data_loss) ⇒
+    ((loss, aux), grads) with grads of total_loss.
+
+    ``micro_batches`` > 1 splits the global batch and accumulates gradients
+    in f32 over a lax.scan — the standard memory lever: activation temp
+    scales with the micro-batch, not the global batch (§Perf memory term).
+    """
+    vag = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if micro_batches <= 1:
+        def lg(params, batch):
+            (loss, aux), grads = vag(params, batch)
+            return (loss, aux), grads
+        return lg
+
+    def lg(params, batch):
+        m = micro_batches
+
+        def split(x):
+            assert x.shape[0] % m == 0, (x.shape, m)
+            return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        g0 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, aux_acc, g_acc = carry
+            (l, a), g = vag(params, mb)
+            g_acc = jax.tree.map(lambda acc, gi: acc + gi.astype(jnp.float32),
+                                 g_acc, g)
+            return (loss_acc + l, aux_acc + a, g_acc), None
+
+        from repro.analysis.mode import scan_unroll
+        (loss, aux, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32), g0),
+            micro, unroll=scan_unroll())
+        inv = 1.0 / m
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return (loss * inv, aux * inv), grads
+
+    return lg
+
+
+def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
+                    *, inconsistent: bool = True, lr_fn: Callable = None,
+                    donate: bool = True):
+    """Returns (init_fn, step_fn).
+
+    step_fn(state, params, batch, lr_override=None) ->
+        (state, params, metrics).  If ``lr_fn`` is given, the LR is derived
+    from the running average loss ψ̄ (the paper's loss-driven schedule);
+    otherwise pass lr explicitly.
+    """
+    lg = make_loss_and_grad(loss_fn)
+
+    def init_fn(params):
+        return isgd_init(rule, isgd_cfg, params)
+
+    def step_fn(state, params, batch, lr=None):
+        if lr is None:
+            from repro.core import control as C
+            lr = lr_fn(C.mean(state.queue))
+        if inconsistent:
+            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr)
+        return consistent_step(rule, lg, state, params, batch, lr)
+
+    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+    return init_fn, jax.jit(step_fn, **jit_kwargs)
+
+
+@dataclass
+class TrainLog:
+    losses: list = field(default_factory=list)
+    limits: list = field(default_factory=list)
+    psi_bar: list = field(default_factory=list)
+    psi_std: list = field(default_factory=list)
+    accelerated: list = field(default_factory=list)
+    sub_iters: list = field(default_factory=list)
+    wall: list = field(default_factory=list)
+
+    def append(self, metrics: Dict[str, Any], wall: float):
+        self.losses.append(float(metrics["loss"]))
+        self.limits.append(float(metrics["limit"]))
+        self.psi_bar.append(float(metrics["psi_bar"]))
+        self.psi_std.append(float(metrics["psi_std"]))
+        self.accelerated.append(bool(metrics["accelerated"]))
+        self.sub_iters.append(int(metrics["sub_iters"]))
+        self.wall.append(wall)
+
+
+def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
+          inconsistent: bool = True, isgd_cfg: Optional[ISGDConfig] = None,
+          lr_fn: Callable = None, log_every: int = 0,
+          eval_fn: Callable = None, eval_every: int = 0):
+    """Simple host loop over FCPR batches (CPU reproduction path)."""
+    if isgd_cfg is None:
+        isgd_cfg = ISGDConfig(n_batches=sampler.n_batches)
+    if lr_fn is None:
+        lr_fn = constant_lr(lr)
+    init_fn, step_fn = make_train_step(loss_fn, rule, isgd_cfg,
+                                       inconsistent=inconsistent, lr_fn=lr_fn)
+    params = jax.tree.map(jnp.copy, params)   # step donates its inputs
+    state = init_fn(params)
+    log = TrainLog()
+    evals = []
+    t0 = time.perf_counter()
+    for j in range(steps):
+        batch = sampler(j)
+        state, params, metrics = step_fn(state, params, batch)
+        jax.block_until_ready(metrics["loss"])
+        log.append(metrics, time.perf_counter() - t0)
+        if log_every and (j + 1) % log_every == 0:
+            print(f"  step {j+1:5d} loss={log.losses[-1]:.4f} "
+                  f"psi_bar={log.psi_bar[-1]:.4f} limit={log.limits[-1]:.4f} "
+                  f"accel={log.accelerated[-1]}")
+        if eval_fn and eval_every and (j + 1) % eval_every == 0:
+            evals.append((j + 1, time.perf_counter() - t0, eval_fn(params)))
+    return params, state, log, evals

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run single-device CPU (do NOT set xla_force_host_platform_device_count
+# here — only the dry-run uses 512 placeholder devices).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,29 @@
+"""Eq.21–24 time-domain batch-size model."""
+import numpy as np
+
+from repro.core import batch_model as bm
+
+
+def test_iter_time_linear_in_batch():
+    assert bm.iter_time(1000, 1000.0, 0.1) == np.asarray(1.1)
+
+
+def test_loss_bound_decreases_in_T():
+    assert bm.loss_bound(100, 1000) < bm.loss_bound(100, 100)
+
+
+def test_predicted_time_has_interior_optimum():
+    """Fig.5: fast system (C1 high) with sync cost C2 has optimum at a
+    moderate batch, and performance deteriorates for huge batches."""
+    cand = np.arange(50, 3050, 50)
+    times = bm.predicted_time_to_loss(cand, psi=0.02, c1=3000.0, c2=0.5)
+    i = int(np.argmin(times))
+    assert 0 < i < len(cand) - 1                       # interior optimum
+    assert times[-1] > times[i]                        # unwieldy batch is slower
+
+
+def test_faster_system_prefers_larger_batch():
+    """The paper's Fig.5 observation: a faster system needs a larger batch."""
+    b_slow = bm.optimal_batch_size(0.02, c1=1000.0, c2=0.5)
+    b_fast = bm.optimal_batch_size(0.02, c1=6000.0, c2=0.5)
+    assert b_fast >= b_slow

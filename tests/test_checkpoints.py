@@ -1,0 +1,36 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ISGDConfig, isgd_init
+from repro.optim import momentum
+from repro.train import checkpoints
+
+
+def test_roundtrip(tmp_path):
+    params = {"a": jnp.arange(6.0).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+              "list": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    path = str(tmp_path / "ckpt.npz")
+    checkpoints.save(path, params, extra={"step": 7})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    restored = checkpoints.restore(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    assert checkpoints.load_extra(path)["step"] == 7
+
+
+def test_isgd_state_roundtrip(tmp_path):
+    """The control queue must survive a restart (resume with limit intact)."""
+    params = {"w": jnp.ones((3,))}
+    state = isgd_init(momentum(0.9), ISGDConfig(n_batches=4), params)
+    from repro.core import control
+    for x in (1.0, 2.0, 3.0, 4.0):
+        state = state._replace(queue=control.push(state.queue, x))
+    path = str(tmp_path / "state.npz")
+    checkpoints.save(path, state)
+    restored = checkpoints.restore(path, jax.tree.map(jnp.zeros_like, state))
+    assert float(control.mean(restored.queue)) == float(control.mean(state.queue))
+    assert float(control.control_limit(restored.queue)) == \
+        float(control.control_limit(state.queue))

@@ -1,0 +1,62 @@
+"""ISGD loss-queue statistics vs a numpy sliding-window oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import control
+
+
+def _run_queue(losses, n_b):
+    q = control.init_queue(n_b)
+    out = []
+    for x in losses:
+        q = control.push(q, x)
+        out.append((float(control.mean(q)), float(control.std(q)),
+                    float(control.control_limit(q))))
+    return q, out
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=20.0, allow_nan=False,
+                          width=32),
+                min_size=1, max_size=60),
+       st.integers(min_value=1, max_value=12))
+@settings(max_examples=50, deadline=None)
+def test_queue_matches_sliding_window(losses, n_b):
+    _, out = _run_queue(losses, n_b)
+    for t, (m, s, lim) in enumerate(out):
+        window = np.array(losses[max(0, t + 1 - n_b):t + 1], np.float32)
+        assert m == pytest.approx(float(window.mean()), rel=1e-4, abs=1e-4)
+        assert s == pytest.approx(float(window.std()), rel=1e-3, abs=1e-3)
+        if t + 1 < n_b:
+            assert lim == np.inf          # warm-up: never triggers
+        else:
+            assert lim == pytest.approx(window.mean() + 3 * window.std(),
+                                        rel=1e-3, abs=1e-3)
+
+
+def test_queue_is_o1_memory():
+    q = control.init_queue(8)
+    assert q.buf.size == 8
+    for x in range(100):
+        q = control.push(q, float(x))
+    assert q.buf.size == 8                 # fixed, independent of iterations
+
+
+def test_limit_monotone_in_k():
+    q = control.init_queue(4)
+    for x in [1.0, 2.0, 3.0, 4.0]:
+        q = control.push(q, x)
+    l2 = float(control.control_limit(q, 2.0))
+    l3 = float(control.control_limit(q, 3.0))
+    assert l3 > l2 > float(control.mean(q))
+
+
+def test_ring_eviction_exact():
+    q = control.init_queue(3)
+    for x in [10.0, 1.0, 1.0, 1.0]:
+        q = control.push(q, x)
+    # the 10.0 must have been fully evicted
+    assert float(control.mean(q)) == pytest.approx(1.0)
+    assert float(control.std(q)) == pytest.approx(0.0, abs=1e-5)

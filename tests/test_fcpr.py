@@ -1,0 +1,49 @@
+"""FCPR sampling invariants (paper §3.4), property-based."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import FCPRSampler
+
+
+def _make(n, bs, seed=0, q=1.0):
+    data = {"x": np.arange(n * 3, dtype=np.float32).reshape(n, 3),
+            "labels": np.arange(n, dtype=np.int32)}
+    return FCPRSampler(data, batch_size=bs, seed=seed, shuffle_quality=q)
+
+
+@given(st.integers(min_value=2, max_value=64), st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=5))
+@settings(max_examples=40, deadline=None)
+def test_every_batch_exactly_once_per_epoch(n_batches, bs, seed):
+    s = _make(n_batches * bs, bs, seed)
+    assert s.n_batches == n_batches
+    seen = [s.batch_index(j) for j in range(n_batches)]
+    assert sorted(seen) == list(range(n_batches))          # ring covers all
+
+
+@given(st.integers(min_value=1, max_value=40))
+@settings(max_examples=30, deadline=None)
+def test_fixed_cycle_identity(j):
+    """Iteration j and j+epoch fetch the SAME batch (paper: t = j mod n_d/n_b)."""
+    s = _make(24, 4)
+    b1 = s(j)
+    b2 = s(j + s.n_batches)
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_batches_are_disjoint_cover():
+    s = _make(30, 5)
+    all_labels = np.concatenate([s(j)["labels"] for j in range(s.n_batches)])
+    assert sorted(all_labels.tolist()) == sorted(
+        s.arrays["labels"].tolist())
+
+
+def test_shuffle_quality_zero_keeps_order():
+    s = _make(20, 5, q=0.0)
+    np.testing.assert_array_equal(s.arrays["labels"], np.arange(20))
+
+
+def test_shuffle_quality_one_permutes():
+    s = _make(200, 5, q=1.0)
+    assert not np.array_equal(s.arrays["labels"], np.arange(200))

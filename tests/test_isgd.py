@@ -1,0 +1,118 @@
+"""ISGD core behaviour: subproblem descent, conservative bound, control
+flow of the inconsistent step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ISGDConfig, consistent_step, isgd_init, isgd_step,
+                        solve_subproblem)
+from repro.optim import momentum, sgd
+from repro.train.trainer import make_loss_and_grad
+
+
+def quad_loss(params, batch):
+    w = params["w"]
+    loss = 0.5 * jnp.sum((w - batch["target"]) ** 2)
+    return loss, loss
+
+
+LG = make_loss_and_grad(quad_loss)
+
+
+def test_subproblem_reduces_loss_toward_limit():
+    params = {"w": jnp.array([4.0, -4.0])}
+    batch = {"target": jnp.zeros(2)}
+    (loss0, _), _ = LG(params, batch)
+    limit = jnp.asarray(4.0)
+    cfg = ISGDConfig(n_batches=4, stop=20, epsilon=0.1, zeta=0.05)
+
+    def lg(w):
+        (l, _), g = LG(w, batch)
+        return l, g
+
+    w, used = solve_subproblem(lg, params, limit, loss0, 0.05, cfg)
+    (loss1, _), _ = LG(w, batch)
+    assert float(loss1) < float(loss0)
+    assert int(used) > 0
+    # early stopping: once under the limit it must stop
+    assert float(loss1) <= float(loss0)
+
+
+def test_subproblem_early_stops_at_stop():
+    params = {"w": jnp.array([100.0])}
+    batch = {"target": jnp.zeros(1)}
+    (loss0, _), _ = LG(params, batch)
+    cfg = ISGDConfig(n_batches=4, stop=3, zeta=1e-6)   # tiny steps: never converges
+
+    def lg(w):
+        (l, _), g = LG(w, batch)
+        return l, g
+
+    _, used = solve_subproblem(lg, params, jnp.asarray(0.0), loss0, 1e-6, cfg)
+    assert int(used) == 3
+
+
+def test_conservative_term_bounds_parameter_change():
+    """Larger epsilon ⇒ smaller distance from the entry weights."""
+    params = {"w": jnp.full((4,), 1.0)}
+    batch = {"target": jnp.zeros(4)}
+    (loss0, _), _ = LG(params, batch)          # ψ = 2.0
+
+    def lg(w):
+        (l, _), g = LG(w, batch)
+        return l, g
+
+    dists = []
+    for eps in (0.0, 50.0):                    # ζ·ε/n_w stays contractive
+        cfg = ISGDConfig(n_batches=4, stop=10, epsilon=eps, zeta=0.01)
+        w, _ = solve_subproblem(lg, params, jnp.asarray(1.0), loss0, 0.01, cfg)
+        dists.append(float(jnp.linalg.norm(w["w"] - params["w"])))
+    assert dists[1] < dists[0]
+
+
+def test_isgd_equals_sgd_during_warmup():
+    """Before one full epoch the limit is +inf, so ISGD ≡ base rule."""
+    rule = momentum(0.9)
+    cfg = ISGDConfig(n_batches=8)
+    params_a = {"w": jnp.arange(4.0)}
+    params_b = {"w": jnp.arange(4.0)}
+    state_a = isgd_init(rule, cfg, params_a)
+    state_b = isgd_init(rule, cfg, params_b)
+    batch = {"target": jnp.ones(4)}
+    for _ in range(5):
+        state_a, params_a, ma = isgd_step(rule, cfg, LG, state_a, params_a,
+                                          batch, 0.1)
+        state_b, params_b, mb = consistent_step(rule, LG, state_b, params_b,
+                                                batch, 0.1)
+    np.testing.assert_allclose(params_a["w"], params_b["w"], rtol=1e-6)
+    assert int(state_a.accel_count) == 0
+
+
+def test_isgd_accelerates_outlier_batch():
+    """After warm-up, a batch with an outlier loss triggers the subproblem."""
+    rule = sgd()
+    cfg = ISGDConfig(n_batches=4, k_sigma=1.0, stop=4, zeta=0.05)
+    params = {"w": jnp.zeros(2)}
+    state = isgd_init(rule, cfg, params)
+    easy = {"target": jnp.zeros(2)}
+    for _ in range(4):
+        state, params, m = isgd_step(rule, cfg, LG, state, params, easy, 0.01)
+    assert int(state.accel_count) == 0
+    hard = {"target": jnp.full((2,), 50.0)}
+    state, params, m = isgd_step(rule, cfg, LG, state, params, hard, 0.01)
+    assert bool(m["accelerated"])
+    assert int(state.accel_count) == 1
+    assert int(m["sub_iters"]) > 0
+
+
+def test_metrics_surface_complete():
+    rule = sgd()
+    cfg = ISGDConfig(n_batches=2)
+    params = {"w": jnp.zeros(2)}
+    state = isgd_init(rule, cfg, params)
+    state, params, m = isgd_step(rule, cfg, LG, state, params,
+                                 {"target": jnp.ones(2)}, 0.1)
+    for k in ("loss", "psi_bar", "psi_std", "limit", "accelerated",
+              "sub_iters"):
+        assert k in m

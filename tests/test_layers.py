@@ -1,0 +1,119 @@
+"""Layer-level properties: causality, sliding window, RoPE, MoE routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import moe as M
+from repro.models.layers import _attend_chunked, apply_rope, rms_norm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_causality_future_token_cannot_leak():
+    B, S, H, hd = 1, 64, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
+    out1 = _attend_chunked(q, k, v, causal=True, window=None, q_chunk=16)
+    # perturb the LAST key/value; outputs at positions < S-1 must not change
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(100.0)
+    out2 = _attend_chunked(q, k2, v2, causal=True, window=None, q_chunk=16)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+def test_sliding_window_drops_distant_context():
+    B, S, H, hd, W = 1, 64, 1, 8, 8
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
+    out1 = _attend_chunked(q, k, v, causal=True, window=W, q_chunk=16)
+    # perturbing a key more than W before the last query changes nothing there
+    k2 = k.at[:, 0].add(100.0)
+    v2 = v.at[:, 0].add(100.0)
+    out2 = _attend_chunked(q, k2, v2, causal=True, window=W, q_chunk=16)
+    np.testing.assert_allclose(out1[:, W:], out2[:, W:], rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(min_value=1, max_value=64))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(pos):
+    """Rotations preserve per-head vector norms."""
+    x = jax.random.normal(KEY, (1, 1, 2, 32))
+    p = jnp.full((1, 1), pos)
+    y = apply_rope(x, p, theta=1e4)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    q = jax.random.normal(KEY, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, 16))
+
+    def dot(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i), 1e4)
+        kj = apply_rope(k, jnp.full((1, 1), j), 1e4)
+        return float(jnp.sum(qi * kj))
+
+    assert dot(5, 3) == pytest.approx(dot(10, 8), rel=1e-4)
+    assert dot(7, 7) == pytest.approx(dot(0, 0), rel=1e-4)
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(KEY, (4, 64)) * 10
+    y = rms_norm(x, jnp.zeros(64))
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing
+# ---------------------------------------------------------------------------
+def _moe_cfg():
+    return get_config("mixtral_8x22b").reduced()
+
+
+def test_moe_forward_shapes_and_aux():
+    cfg = _moe_cfg()
+    p = M.init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 64, cfg.d_model),
+                          jnp.bfloat16)
+    y, aux = M.moe_forward(p, cfg, x)
+    assert y.shape == x.shape
+    assert jnp.isfinite(aux)
+    assert float(aux) >= 0.99            # Switch aux loss lower bound ≈ 1
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With uniform random routing, most tokens must be kept."""
+    cfg = _moe_cfg()
+    p = M.init_moe(KEY, cfg)
+    x = 0.02 * jax.random.normal(jax.random.fold_in(KEY, 2),
+                                 (1, 128, cfg.d_model), jnp.bfloat16)
+    y, _ = M.moe_forward(p, cfg, x)
+    # dropped tokens produce zero routed output; require <30% zeros
+    routed_norm = jnp.linalg.norm(
+        y.astype(jnp.float32)
+        - (jax.nn.silu(x @ p["swg"]) * (x @ p["swi"]) @ p["swo"]).astype(jnp.float32)
+        if cfg.num_shared_experts else y.astype(jnp.float32), axis=-1)
+    frac_zero = float((routed_norm < 1e-6).mean())
+    assert frac_zero < 0.3
+
+
+def test_moe_decode_matches_forward_single_position():
+    cfg = _moe_cfg()
+    p = M.init_moe(KEY, cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 1, cfg.d_model),
+                          jnp.bfloat16)
+    y_dec, _ = M.moe_decode(p, cfg, x)
+    # forward path with S=1 groups over batch… compare against groupwise route
+    y_fwd, _ = M.moe_forward(p, cfg, x.transpose(1, 0, 2))
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0], np.float32),
+                               np.asarray(y_fwd[0], np.float32),
+                               rtol=5e-2, atol=5e-2)

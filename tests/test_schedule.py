@@ -1,0 +1,21 @@
+"""Loss-driven LR schedule (paper §5.2 AlexNet schedule)."""
+import pytest
+
+from repro.core.schedule import ALEXNET_SCHEDULE, constant_lr, loss_driven_lr
+
+
+def test_alexnet_schedule_bands():
+    assert float(ALEXNET_SCHEDULE(3.0)) == pytest.approx(0.015)
+    assert float(ALEXNET_SCHEDULE(2.0)) == pytest.approx(0.015)
+    assert float(ALEXNET_SCHEDULE(1.5)) == pytest.approx(0.0015)
+    assert float(ALEXNET_SCHEDULE(0.5)) == pytest.approx(0.00015)
+
+
+def test_constant():
+    fn = constant_lr(0.3)
+    assert float(fn(99.0)) == pytest.approx(0.3)
+
+
+def test_lr_monotone_in_loss():
+    fn = loss_driven_lr([2.0, 1.0], [0.1, 0.01, 0.001])
+    assert float(fn(5.0)) > float(fn(1.5)) > float(fn(0.1))

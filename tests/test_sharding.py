@@ -1,0 +1,63 @@
+"""Sharding rule engine: divisibility fallbacks (no real mesh needed)."""
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_pick_spec_prefers_first_divisible():
+    spec = rules.pick_spec(MESH, (64, 4096),
+                           [("data", "model"), (None, "model"), (None, None)])
+    assert spec == P("data", "model")
+
+
+def test_pick_spec_falls_back_on_indivisible():
+    # mixtral: 8 experts cannot shard over model=16
+    spec = rules.pick_spec(MESH, (8, 6144, 16384),
+                           [("model", None, None), (None, "data", "model"),
+                            (None, None, None)])
+    assert spec == P(None, "data", "model")
+
+
+def test_pick_spec_replicates_when_nothing_fits():
+    spec = rules.pick_spec(MESH, (7, 13), [("data", "model"), ("model", None)])
+    assert spec == P()
+
+
+def test_param_spec_embed_sharded_over_model():
+    # padded vocab divides 16
+    spec = rules.param_spec(MESH, "embed", (92672, 2048))
+    assert "model" in str(spec)
+
+
+def test_param_spec_small_leaf_replicated():
+    assert rules.param_spec(MESH, "blocks/0/ln1", (64,)) == P()
+
+
+def test_param_spec_moe_expert_parallel_when_divisible():
+    # deepseek 64 experts over model=16 ✓
+    spec = rules.param_spec(MESH, "blocks/0/mlp/wi", (26, 64, 2048, 1408))
+    assert spec[1] == "model"
+    # mixtral 8 experts — falls back to d_ff sharding
+    spec = rules.param_spec(MESH, "blocks/0/mlp/wi", (56, 8, 6144, 16384))
+    assert spec[1] != "model"
+    assert "model" in tuple(spec)
+
+
+def test_pod_axis_in_batch_axes():
+    assert rules.batch_axes(POD) == ("pod", "data")
+    assert rules.batch_axes(MESH) == ("data",)
+
+
+def test_activation_table_long_context_falls_back_to_seq():
+    t = rules.activation_rule_table(POD, global_batch=1, seq_shard=True)
+    assert t["hidden"][1] == "data"          # sequence axis sharded

@@ -1,0 +1,66 @@
+"""End-to-end system behaviour: the paper's qualitative claims reproduced at
+CPU scale (small synthetic data + CIFAR-quick CNN).
+
+These mirror EXPERIMENTS.md E4/E5 but at smoke scale, so the claims are
+guarded by CI rather than only by the benchmark harness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CIFAR_QUICK
+from repro.core import ISGDConfig
+from repro.data import FCPRSampler, make_classification
+from repro.models import cnn_loss_fn, init_cnn
+from repro.optim import momentum
+from repro.train import train
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = make_classification(0, 800, 16, 3, 10, noise=0.6, class_skew=0.3,
+                               class_spread=2.0)
+    sampler = FCPRSampler(data, batch_size=80, seed=1, shuffle_quality=0.5)
+    import dataclasses
+    cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3, num_classes=10)
+    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)    # noqa: E731
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    return sampler, loss_fn, params
+
+
+def _run(setup, inconsistent, steps=60, k_sigma=1.5):
+    sampler, loss_fn, params = setup
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=k_sigma, stop=3,
+                      zeta=0.02)
+    return train(params, loss_fn, momentum(0.9), sampler, steps=steps,
+                 lr=0.05, inconsistent=inconsistent, isgd_cfg=icfg)
+
+
+def test_training_descends(setup):
+    _, _, log, _ = _run(setup, inconsistent=False)
+    assert log.psi_bar[-1] < log.psi_bar[10]
+
+
+def test_isgd_triggers_and_tracks_limit(setup):
+    _, state, log, _ = _run(setup, inconsistent=True)
+    assert int(state.accel_count) > 0, "control limit never triggered"
+    warm = [i for i in range(len(log.losses)) if np.isfinite(log.limits[i])]
+    assert warm, "limit never became finite"
+    for i in warm:
+        assert log.limits[i] >= log.psi_bar[i]
+
+
+def test_isgd_average_loss_not_worse(setup):
+    """The paper's headline: ISGD converges at least as fast (avg loss)."""
+    _, _, log_sgd, _ = _run(setup, inconsistent=False)
+    _, _, log_isgd, _ = _run(setup, inconsistent=True)
+    a = np.mean(log_isgd.psi_bar[-10:])
+    b = np.mean(log_sgd.psi_bar[-10:])
+    assert a <= b * 1.05, (a, b)
+
+
+def test_isgd_subproblem_respects_stop(setup):
+    _, state, log, _ = _run(setup, inconsistent=True)
+    per_accel = [s for s, a in zip(log.sub_iters, log.accelerated) if a]
+    assert per_accel and all(1 <= s <= 3 for s in per_accel), per_accel
