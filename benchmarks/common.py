@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 import time
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))

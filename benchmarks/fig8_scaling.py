@@ -1,0 +1,149 @@
+"""Paper Fig.8 (§6): data-parallel throughput vs per-device batch size.
+
+Sweeps per-device batch under the shard_map ISGD engine for each device
+count, measuring ms/step and samples/s, then fits the paper's Eq.21 cost
+model t_iter = B_global/C1 + C2 per device count.  The paper's claim under
+test: per-step overhead C2 (sync + launch) is amortized by larger
+per-device batches, so the time-optimal batch grows with device count —
+"batch size is the key to scalability".
+
+Each (devices, batch) cell runs in a fresh child interpreter because
+``--xla_force_host_platform_device_count`` (the flag that splits the host
+CPU into N XLA devices) must be set before jax initializes; the parent
+never imports jax.  Standalone worker invocation:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m benchmarks.fig8_scaling --worker --per-device-batch 16
+
+NOTE: on this container every "device" shares the same host cores, so
+absolute samples/s does NOT scale with N — the run exercises the real
+multi-device code path and the C1/C2 fit shape, not real speedup.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit, save_json, scaled
+
+DEVICE_COUNTS = (1, 2, 8)
+PER_DEVICE_BATCHES = (4, 16, 64)
+
+
+def _worker(args) -> None:
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ISGDConfig
+    from repro.data import FCPRSampler, make_classification
+    from repro.distributed import make_data_parallel_step, prefetched
+    from repro.launch.mesh import make_data_mesh
+    from repro.models import cnn_loss_fn, init_cnn
+    from repro.optim import momentum
+    import dataclasses
+
+    from repro.configs import CIFAR_QUICK
+
+    n_dev = len(jax.devices())
+    global_batch = args.per_device_batch * n_dev
+    cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3,
+                              num_classes=10)
+    data = make_classification(0, max(global_batch * 4, 256), 16, 3, 10,
+                               noise=0.6)
+    sampler = FCPRSampler(data, batch_size=global_batch, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
+    mesh = make_data_mesh()
+    init_fn, step = make_data_parallel_step(
+        lambda p, b: cnn_loss_fn(p, cfg, b), momentum(0.9), icfg, mesh,
+        lr_fn=lambda _: jnp.asarray(0.05))
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    state = init_fn(params)
+    prefetch = prefetched(sampler, mesh)
+
+    # warmup (compile) then timed steps
+    state, params, m = step(state, params, prefetch(0))
+    jax.block_until_ready(m["loss"])
+    steps = args.steps
+    t0 = time.perf_counter()
+    for j in range(1, steps + 1):
+        state, params, m = step(state, params, prefetch(j))
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / steps
+    print(f"RESULT {n_dev} {args.per_device_batch} {dt*1e3:.3f} "
+          f"{global_batch/dt:.1f}", flush=True)
+
+
+def _spawn(devices: int, per_device_batch: int, steps: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, root, env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.fig8_scaling", "--worker",
+         "--per-device-batch", str(per_device_batch), "--steps", str(steps)],
+        capture_output=True, text=True, env=env, cwd=root, timeout=1200)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            _, n, b, ms, sps = line.split()
+            return {"devices": int(n), "per_device_batch": int(b),
+                    "ms_per_step": float(ms), "samples_per_s": float(sps)}
+    raise RuntimeError(
+        f"worker devices={devices} b={per_device_batch} failed:\n"
+        f"{proc.stdout}\n{proc.stderr}")
+
+
+def _fit_c1_c2(cells):
+    """Least-squares Eq.21 fit t_iter = B_global/C1 + C2 for one device
+    count; returns (C1 samples/s, C2 s)."""
+    import numpy as np
+    bs = np.array([c["per_device_batch"] * c["devices"] for c in cells], float)
+    ts = np.array([c["ms_per_step"] * 1e-3 for c in cells])
+    A = np.stack([bs, np.ones_like(bs)], axis=1)
+    (inv_c1, c2), *_ = np.linalg.lstsq(A, ts, rcond=None)
+    return 1.0 / max(inv_c1, 1e-9), max(c2, 0.0)
+
+
+def run():
+    steps = scaled(8, lo=3)
+    cells = []
+    for n in DEVICE_COUNTS:
+        for b in PER_DEVICE_BATCHES:
+            cells.append(_spawn(n, b, steps))
+    fits = {}
+    for n in DEVICE_COUNTS:
+        mine = [c for c in cells if c["devices"] == n]
+        c1, c2 = _fit_c1_c2(mine)
+        fits[n] = {"c1_samples_per_s": c1, "c2_s": c2}
+        best = max(mine, key=lambda c: c["samples_per_s"])
+        emit(f"fig8_scaling_n{n}",
+             best["ms_per_step"] * 1e3,
+             best_per_device_batch=best["per_device_batch"],
+             best_samples_per_s=f"{best['samples_per_s']:.1f}",
+             fitted_C1=f"{c1:.0f}", fitted_C2_ms=f"{c2*1e3:.2f}")
+    save_json("fig8_scaling", {"cells": cells, "fits": fits,
+                               "steps_per_cell": steps})
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--per-device-batch", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=8)
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

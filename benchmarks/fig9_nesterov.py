@@ -10,7 +10,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, save_json, scaled
 from repro.configs import CIFAR_QUICK

@@ -13,8 +13,8 @@ import traceback
 
 from benchmarks import (fig1_loss_traces, fig3_control_limit,
                         fig6_inconsistent_training, fig8_batch_size,
-                        fig9_nesterov, kernels_bench, roofline_bench,
-                        table1_time_to_accuracy)
+                        fig8_scaling, fig9_nesterov, kernels_bench,
+                        roofline_bench, table1_time_to_accuracy)
 
 ALL = {
     "fig1": fig1_loss_traces.run,
@@ -22,6 +22,7 @@ ALL = {
     "fig6": fig6_inconsistent_training.run,
     "table1": table1_time_to_accuracy.run,
     "fig8": fig8_batch_size.run,
+    "fig8_scaling": fig8_scaling.run,
     "fig9": fig9_nesterov.run,
     "kernels": kernels_bench.run,
     "roofline": roofline_bench.run,

@@ -9,7 +9,6 @@ We report normalized time-to-target (SGD = 1.0) over REPRO_BENCH_RUNS runs.
 from __future__ import annotations
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp

@@ -7,26 +7,62 @@ to train a ~100M-param variant for a few hundred steps (the deliverable's
 "train ~100M model" configuration — expect a few hours on this 1-core CPU
 container; on a real TPU slice this is minutes).
 
+``--devices N`` (N > 1) runs both legs on the shard_map data-parallel ISGD
+engine (repro.distributed): the host CPU is split into N XLA devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag is
+injected here BEFORE jax initializes, which is why it is parsed ahead of
+the normal argparse pass.  The global --batch must be a multiple of N
+(each device takes batch/N samples); inputs ride the double-buffered
+prefetcher.  (Setting XLA_FLAGS yourself works too and
+takes precedence; --devices is a convenience for single-host smoke runs.)
+
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --steps 200
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --params 100 --steps 300
+  PYTHONPATH=src python examples/train_isgd_vs_sgd.py --devices 8 --batch 16
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.core import ISGDConfig
-from repro.data import FCPRSampler, make_lm_tokens
-from repro.models import build_model
-from repro.optim import momentum
-from repro.train import checkpoints, make_train_step
-from repro.train.trainer import TrainLog
+def _inject_device_count(argv=None) -> None:
+    """Handle --devices before first jax import (XLA reads the flag at
+    backend init; too late once jax device state exists)."""
+    argv = sys.argv if argv is None else argv
+    assert "jax" not in sys.modules
+    for i, a in enumerate(argv):
+        n = 0
+        if a.startswith("--devices="):
+            n = int(a.split("=", 1)[1])
+        elif a == "--devices" and i + 1 < len(argv):
+            n = int(argv[i + 1])
+        if n > 1 and "--xla_force_host_platform_device_count" not in \
+                os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={n}").strip()
+
+
+_inject_device_count()
+
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+import numpy as np            # noqa: E402
+
+from repro.configs import get_config                       # noqa: E402
+from repro.core import ISGDConfig                          # noqa: E402
+from repro.data import FCPRSampler, make_lm_tokens         # noqa: E402
+from repro.distributed import (make_data_parallel_step,    # noqa: E402
+                               prefetched)
+from repro.launch.mesh import make_data_mesh               # noqa: E402
+from repro.models import build_model                       # noqa: E402
+from repro.optim import momentum                           # noqa: E402
+from repro.train import checkpoints, make_train_step       # noqa: E402
+from repro.train.trainer import TrainLog                   # noqa: E402
 
 
 def model_for(params_m: int):
@@ -48,32 +84,50 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="split the host into N XLA devices and use the "
+                         "data-parallel engine (see module docstring)")
     ap.add_argument("--ckpt", default="experiments/e2e_lm.npz")
     args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    if args.devices > 1 and args.batch % n_dev:
+        raise SystemExit(f"--batch {args.batch} must be a multiple of the "
+                         f"{n_dev} devices (it is split across them)")
 
     cfg = model_for(args.params)
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params0 = model.init(key, max_seq=args.seq)
     n = sum(x.size for x in jax.tree.leaves(params0))
-    print(f"model: {cfg.name}-derived, {n/1e6:.1f}M params")
+    print(f"model: {cfg.name}-derived, {n/1e6:.1f}M params, "
+          f"{n_dev} device(s)")
 
     data = make_lm_tokens(0, n_seqs=64, seq_len=args.seq, vocab=cfg.vocab_size)
     sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
+    mesh = make_data_mesh() if args.devices > 1 else None
 
     results = {}
     for name, inconsistent in (("sgd", False), ("isgd", True)):
-        init_fn, step_fn = make_train_step(
-            model.loss_fn, momentum(0.9), icfg, inconsistent=inconsistent,
-            lr_fn=lambda _: jnp.asarray(args.lr))
+        lr_fn = lambda _: jnp.asarray(args.lr)       # noqa: E731
+        if mesh is not None:
+            init_fn, step_fn = make_data_parallel_step(
+                model.loss_fn, momentum(0.9), icfg, mesh,
+                inconsistent=inconsistent, lr_fn=lr_fn)
+            feed = prefetched(sampler, mesh)
+        else:
+            init_fn, step_fn = make_train_step(
+                model.loss_fn, momentum(0.9), icfg,
+                inconsistent=inconsistent, lr_fn=lr_fn)
+            feed = lambda j: {k: jnp.asarray(v)      # noqa: E731
+                              for k, v in sampler(j).items()}
         params = jax.tree.map(jnp.copy, params0)
         state = init_fn(params)
         log = TrainLog()
         t0 = time.perf_counter()
         for j in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
-            state, params, m = step_fn(state, params, batch)
+            state, params, m = step_fn(state, params, feed(j))
             log.append(jax.tree.map(np.asarray, m), time.perf_counter() - t0)
             if (j + 1) % 20 == 0:
                 print(f"[{name}] step {j+1:4d} loss={log.losses[-1]:.4f} "

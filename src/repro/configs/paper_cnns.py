@@ -3,7 +3,7 @@ CIFAR-10-Quick on CIFAR-10, AlexNet on ImageNet — reimplemented in pure JAX
 for the faithful ISGD reproduction.  Dims follow the Caffe model zoo
 definitions the paper used.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -7,8 +7,10 @@ from repro.core.isgd import (
     isgd_step,
     solve_subproblem,
 )
+from repro.core.reduce import LOCAL, AxisReduce, LocalReduce, ReduceCtx
 
 __all__ = [
     "ISGDConfig", "ISGDState", "isgd_init", "isgd_step", "consistent_step",
     "solve_subproblem", "control", "schedule", "batch_model",
+    "ReduceCtx", "LocalReduce", "AxisReduce", "LOCAL",
 ]

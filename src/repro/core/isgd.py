@@ -14,6 +14,13 @@ Nesterov, §4.3) with inconsistent training:
 Everything is jit-able: the accelerate branch is a ``lax.cond`` whose
 predicate is a *globally reduced* scalar (identical on every device under
 pjit — DESIGN.md §2), and the inner solver is a ``lax.while_loop``.
+
+The global reduction is enforced (not just assumed) via the ``reduce_ctx``
+argument: every ``loss_and_grad`` evaluation — the main step's and each
+subproblem trip's — goes through ``ReduceCtx.wrap_loss_and_grad``, so under
+``AxisReduce("data")`` inside a ``shard_map`` the gradients are pmean'd and
+ψ is the global-batch mean, making the cond/while control flow identical on
+every device (see ``repro.distributed.data_parallel``).
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.analysis.mode import in_analysis_mode
 from repro.core import control
+from repro.core.reduce import LOCAL, ReduceCtx
 from repro.optim.base import UpdateRule
 
 
@@ -101,12 +109,15 @@ def isgd_init(rule: UpdateRule, cfg: ISGDConfig, params) -> ISGDState:
 
 
 def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
-              state: ISGDState, params, batch, lr):
+              state: ISGDState, params, batch, lr,
+              reduce_ctx: ReduceCtx = LOCAL):
     """One inconsistent-training iteration (Alg.1 body).
 
-    ``loss_and_grad(params, batch) -> ((loss, aux), grads)`` where ``loss``
-    is the globally reduced scalar ψ the controller monitors.
+    ``loss_and_grad(params, batch) -> ((loss, aux), grads)`` computes the
+    per-shard loss/gradients; ``reduce_ctx`` turns them into the globally
+    reduced ψ/grads the controller monitors (identity for single device).
     """
+    loss_and_grad = reduce_ctx.wrap_loss_and_grad(loss_and_grad)
     (loss, aux), grads = loss_and_grad(params, batch)
 
     # line 21: vanilla base update
@@ -149,9 +160,10 @@ def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
 
 
 def consistent_step(rule: UpdateRule, loss_and_grad: Callable, state, params,
-                    batch, lr):
+                    batch, lr, reduce_ctx: ReduceCtx = LOCAL):
     """Baseline SGD/Momentum/Nesterov step (no inconsistent training) with the
     same metrics surface, so benchmarks are single-factor (paper §5.2)."""
+    loss_and_grad = reduce_ctx.wrap_loss_and_grad(loss_and_grad)
     (loss, aux), grads = loss_and_grad(params, batch)
     base_state, params = rule.apply(state.base, params, grads, lr)
     queue = control.push(state.queue, loss)

@@ -13,8 +13,6 @@ cifar-like (32×32×3, 10), imagenet-like (64×64×3, 1000 — downscaled).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import numpy as np
 
 

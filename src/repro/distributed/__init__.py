@@ -1,0 +1,41 @@
+"""Data-parallel ISGD (paper §6): shard_map engine, reduction contexts,
+host->device prefetching, and the N-device parity check.
+
+The reduction contexts themselves live in ``repro.core.reduce`` (so ``core``
+never imports this package); they are re-exported here because callers that
+go distributed pick them together with the engine.
+
+Exports resolve lazily: ``python -m repro.distributed.parity --devices N``
+must be able to set ``--xla_force_host_platform_device_count`` before
+anything imports jax, and this package runs before the submodule does.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ReduceCtx": "repro.core.reduce",
+    "LocalReduce": "repro.core.reduce",
+    "AxisReduce": "repro.core.reduce",
+    "LOCAL": "repro.core.reduce",
+    "make_data_parallel_step": "repro.distributed.data_parallel",
+    "batch_sharding": "repro.distributed.data_parallel",
+    "replicated": "repro.distributed.data_parallel",
+    "data_axis_size": "repro.distributed.data_parallel",
+    "PrefetchSampler": "repro.distributed.prefetch",
+    "prefetched": "repro.distributed.prefetch",
+    "run_parity": "repro.distributed.parity",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(_EXPORTS)

@@ -1,0 +1,95 @@
+"""shard_map data-parallel ISGD engine (paper §6, Fig. 8).
+
+Each device computes loss/gradients on its shard of the global batch; the
+gradients are all-reduced (``pmean`` over the ``data`` axis) and the control
+statistic ψ is the globally reduced batch-mean loss.  Because *both* go
+through ``AxisReduce`` inside the per-device function, the ``lax.cond``
+accelerate predicate and every trip of the subproblem ``while_loop`` are
+computed from replicated values — every device takes the identical branch,
+which is the invariant ``core/isgd.py`` documents and this module enforces.
+
+Layout: params and ISGD state (queue, counters, velocity) are replicated
+(``P()``); only the batch is sharded (leading dim over ``data``).  This is
+the pure data-parallel regime the paper scales (its multi-GPU experiments
+replicate the model); the tensor/FSDP-parallel pjit path in ``launch/`` is
+complementary and untouched.
+
+``make_data_parallel_step`` mirrors ``train.trainer.make_train_step`` —
+same ``(init_fn, step_fn)`` contract, same metrics surface — so the host
+loop, examples, and benchmarks can swap engines with one line.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
+from repro.core.reduce import AxisReduce
+from repro.optim.base import UpdateRule
+from repro.train.trainer import make_loss_and_grad
+
+
+def data_axis_size(mesh: Mesh, axis: str = "data") -> int:
+    return mesh.shape[axis]
+
+
+def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """NamedSharding for host->device batch transfer (leading dim over data).
+
+    Matches the step's ``in_specs`` so the prefetcher's ``device_put`` lands
+    shards exactly where ``shard_map`` consumes them — no resharding copy.
+    """
+    return NamedSharding(mesh, P(axis))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def make_data_parallel_step(loss_fn: Callable, rule: UpdateRule,
+                            isgd_cfg: ISGDConfig, mesh: Mesh, *,
+                            axis: str = "data", inconsistent: bool = True,
+                            lr_fn: Optional[Callable] = None,
+                            micro_batches: int = 1, donate: bool = True):
+    """Returns ``(init_fn, step_fn)`` with the ``make_train_step`` contract.
+
+    ``step_fn(state, params, batch, lr=None) -> (state, params, metrics)``
+    where ``batch`` leaves carry the *global* batch on their leading dim
+    (divisible by the ``data`` axis size) and params/state are replicated.
+    All outputs are replicated: grads are pmean'd before the base update and
+    ψ before the queue push, so every device computes the same new params.
+    """
+    lg = make_loss_and_grad(loss_fn, micro_batches)
+    rctx = AxisReduce(axis)
+
+    def init_fn(params):
+        return isgd_init(rule, isgd_cfg, params)
+
+    def device_step(state, params, batch, lr):
+        if inconsistent:
+            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
+                             reduce_ctx=rctx)
+        return consistent_step(rule, lg, state, params, batch, lr,
+                               reduce_ctx=rctx)
+
+    # check_rep=False: replication of the outputs follows from the pmean'd
+    # grads/ψ, but the rep checker can't see through cond/while_loop bodies.
+    sharded = shard_map(device_step, mesh=mesh,
+                        in_specs=(P(), P(), P(axis), P()),
+                        out_specs=(P(), P(), P()),
+                        check_rep=False)
+
+    def step_fn(state, params, batch, lr=None):
+        if lr is None:
+            from repro.core import control as C
+            lr = lr_fn(C.mean(state.queue))
+        lr = jnp.asarray(lr, jnp.float32)
+        return sharded(state, params, batch, lr)
+
+    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+    return init_fn, jax.jit(step_fn, **jit_kwargs)

@@ -1,0 +1,150 @@
+"""Distributed-parity check: N-device shard_map ISGD vs single-device.
+
+Runs the same FCPR batch sequence through (a) the single-device reference
+``isgd_step`` on the full global batch and (b) the ``shard_map``
+data-parallel step over every available device, then compares params, ψ̄,
+the control limit and the accelerate decision step by step.  The problem is
+rigged so the subproblem actually fires (one outlier batch per cycle), so
+the comparison covers the cond/while control flow, not just the base update.
+
+Usable two ways:
+
+  * in-process (the tier-1 test calls ``run_parity`` on whatever devices
+    exist — 1 on a bare CPU run, 8 under the CI matrix's XLA_FLAGS);
+  * as a module that forces a device count before first jax init:
+
+      PYTHONPATH=src python -m repro.distributed.parity --devices 8
+
+    (``--xla_force_host_platform_device_count`` splits the host CPU into
+    that many XLA devices; it must be set before jax initializes, which is
+    why the flag is handled here rather than by the caller.)
+
+Exit status 0 iff every deviation is within ``--tol`` (default 1e-5).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_host_devices(n: int) -> None:
+    assert "jax" not in sys.modules, "--devices must be set before jax init"
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def run_parity(steps: int = 20, tol: float = 1e-5, *, batch_size: int = 32,
+               n_batches: int = 4, verbose: bool = False) -> dict:
+    """Returns {"ok": bool, "devices": int, "max_param": float, ...}."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ISGDConfig, isgd_init, isgd_step
+    from repro.data import FCPRSampler
+    from repro.distributed.data_parallel import (batch_sharding,
+                                                 make_data_parallel_step)
+    from repro.distributed.prefetch import PrefetchSampler
+    from repro.launch.mesh import make_data_mesh
+    from repro.optim import momentum
+    from repro.train.trainer import make_loss_and_grad
+
+    n_dev = len(jax.devices())
+    assert batch_size % n_dev == 0, (batch_size, n_dev)
+
+    # Tiny least-squares model with a MEAN loss (per-shard means pmean to the
+    # global mean, matching the reference).  One target cluster is an outlier
+    # so its batch loss breaches ψ̄ + kσ every cycle after warm-up.
+    dim = 8
+    rng = np.random.RandomState(0)
+    xs = rng.randn(batch_size * n_batches, dim).astype(np.float32)
+    ys = ((xs @ rng.randn(dim, 1).astype(np.float32)).ravel()
+          / np.sqrt(dim)).astype(np.float32)
+    ys[:batch_size] += 3.0                        # the under-trained batch
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch_size, seed=1)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    rule = momentum(0.9)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.0, stop=3,
+                      zeta=0.01)
+    lr = 0.01
+
+    # reference: single-device, full batch, local reduction
+    lg = make_loss_and_grad(loss_fn)
+    ref_step = jax.jit(
+        lambda s, p, b: isgd_step(rule, icfg, lg, s, p, b, lr))
+    ref_params = jax.tree.map(jnp.copy, params0)
+    ref_state = isgd_init(rule, icfg, ref_params)
+
+    # data-parallel engine over every device, prefetched input pipeline
+    mesh = make_data_mesh()
+    init_fn, dp_step = make_data_parallel_step(
+        loss_fn, rule, icfg, mesh, lr_fn=lambda _: jnp.asarray(lr))
+    dp_params = jax.device_put(params0, jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec()))
+    dp_state = init_fn(dp_params)
+    prefetch = PrefetchSampler(sampler, sharding=batch_sharding(mesh))
+
+    dev = {"param": 0.0, "psi_bar": 0.0, "limit": 0.0}
+    accel_mismatch = 0
+    n_accel = 0
+    for j in range(steps):
+        host = {k: jnp.asarray(v) for k, v in sampler(j).items()}
+        ref_state, ref_params, mr = ref_step(ref_state, ref_params, host)
+        dp_state, dp_params, md = dp_step(dp_state, dp_params, prefetch(j))
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             ref_params, dp_params)
+        dev["param"] = max(dev["param"], max(jax.tree.leaves(diffs)))
+        dev["psi_bar"] = max(dev["psi_bar"],
+                             abs(float(mr["psi_bar"]) - float(md["psi_bar"])))
+        lim_r, lim_d = float(mr["limit"]), float(md["limit"])
+        if not (lim_r == lim_d == float("inf")):
+            dev["limit"] = max(dev["limit"], abs(lim_r - lim_d))
+        accel_mismatch += int(bool(mr["accelerated"]) != bool(md["accelerated"]))
+        n_accel += int(bool(mr["accelerated"]))
+        if verbose:
+            print(f"step {j:3d} loss={float(mr['loss']):8.4f} "
+                  f"accel={bool(mr['accelerated'])} dparam={dev['param']:.2e}")
+
+    ok = (accel_mismatch == 0 and all(v <= tol for v in dev.values()))
+    return {"ok": ok, "devices": n_dev, "steps": steps,
+            "accelerations": n_accel, "accel_mismatch": accel_mismatch,
+            "max_param": dev["param"], "max_psi_bar": dev["psi_bar"],
+            "max_limit": dev["limit"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "(0 = use whatever XLA_FLAGS already provides)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.devices:
+        _force_host_devices(args.devices)
+    r = run_parity(steps=args.steps, tol=args.tol, verbose=args.verbose)
+    print(f"parity devices={r['devices']} steps={r['steps']} "
+          f"accelerations={r['accelerations']} "
+          f"accel_mismatch={r['accel_mismatch']} "
+          f"max_param={r['max_param']:.3e} "
+          f"max_psi_bar={r['max_psi_bar']:.3e} "
+          f"max_limit={r['max_limit']:.3e} -> "
+          f"{'OK' if r['ok'] else 'FAIL'}")
+    if r["accelerations"] == 0:
+        print("parity WARNING: subproblem never fired; cond path untested")
+        return 2
+    return 0 if r["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,70 @@
+"""Double-buffered host->device prefetching sampler.
+
+``jax.device_put`` is asynchronous: it returns immediately with arrays whose
+H2D copies complete in the background.  Wrapping an FCPR-style sampler in
+``PrefetchSampler`` therefore overlaps the *next* batch's transfer (and the
+numpy slicing that feeds it) with the *current* step's compute — the classic
+double-buffer that hides H2D latency on the data-parallel engine, where the
+batch is the only per-step transfer (params/state live on device).
+
+The wrapper preserves the sampler protocol (``__call__(j)``, ``n_batches``,
+``batch_size``, ``batch_index``) and FCPR's fixed-cycle determinism: batch j
+is bit-identical to ``sampler(j)``, merely staged early.  Random access is
+still supported (a miss falls back to a synchronous put), but sequential
+iteration is the fast path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+class PrefetchSampler:
+    def __init__(self, sampler, sharding=None, depth: int = 2):
+        """``sharding``: optional ``jax.sharding.Sharding`` — or a dict of
+        them keyed like the batch (``launch.shardings
+        .data_parallel_shardings``) — for the staged batches, so shards
+        land on their consuming devices.  ``depth`` >= 1 is how many
+        batches may be in flight; 2 = classic double buffering."""
+        assert depth >= 1
+        self.sampler = sampler
+        self.n_batches = sampler.n_batches
+        self.batch_size = sampler.batch_size
+        self._sharding = sharding
+        self._depth = depth
+        self._staged: dict[int, dict] = {}
+
+    def batch_index(self, j: int) -> int:
+        return self.sampler.batch_index(j)
+
+    def _put(self, j: int) -> None:
+        host = self.sampler(j)
+        sh = self._sharding
+        dev = {k: jax.device_put(v, sh[k] if isinstance(sh, dict) else sh)
+               for k, v in host.items()}
+        self._staged[j] = dev
+
+    def __call__(self, j: int) -> dict:
+        if j not in self._staged:          # cold start or random access
+            self._put(j)
+        # enqueue the lookahead window before handing back batch j, so its
+        # transfers overlap the step that consumes j
+        for ahead in range(j + 1, j + self._depth):
+            if ahead not in self._staged:
+                self._put(ahead)
+        batch = self._staged.pop(j)
+        # drop anything stale (random access moved the cursor backwards)
+        for k in [k for k in self._staged if k <= j]:
+            del self._staged[k]
+        return batch
+
+
+def prefetched(sampler, mesh=None, *, axis: str = "data", depth: int = 2,
+               sharding: Optional[object] = None) -> PrefetchSampler:
+    """Convenience: wrap ``sampler`` with the data-parallel batch sharding
+    for ``mesh`` (or an explicit ``sharding``)."""
+    if sharding is None and mesh is not None:
+        from repro.distributed.data_parallel import batch_sharding
+        sharding = batch_sharding(mesh, axis)
+    return PrefetchSampler(sampler, sharding=sharding, depth=depth)

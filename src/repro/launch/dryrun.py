@@ -24,7 +24,6 @@ import time
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis import roofline
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable

@@ -8,18 +8,35 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: ``axis_types`` only exists on
+    newer jax (jax.sharding.AxisType landed after 0.4.x); default behaviour
+    there is Auto, which is what we want everywhere."""
+    kwargs = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (v5e-256).
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Debug mesh over however many (CPU) devices exist."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(devices=None):
+    """1-axis ('data',) mesh for the pure data-parallel ISGD engine
+    (repro.distributed): params/state replicated, batch sharded.  Uses every
+    device unless an explicit list is given."""
+    n = len(devices) if devices is not None else len(jax.devices())
+    return _make_mesh((n,), ("data",), devices=devices)

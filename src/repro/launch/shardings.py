@@ -34,6 +34,20 @@ def batch_shardings(mesh: Mesh, specs: dict, *, seq_shard: bool = False):
     return out
 
 
+def data_parallel_shardings(mesh: Mesh, specs: dict, *, axis: str = "data"):
+    """Pure data-parallel batch layout (the repro.distributed engine):
+    leading (batch) dim over ``axis``, everything else unsharded.  A leaf
+    whose batch dim doesn't divide the axis falls back to replicated, which
+    the engine's shard_map in_specs then reports as a shape error instead of
+    silently mis-sharding."""
+    out = {}
+    for name, sds in specs.items():
+        r = len(sds.shape)
+        cands = [(axis,) + (None,) * (r - 1), (None,) * r]
+        out[name] = _ns(mesh, rules.pick_spec(mesh, sds.shape, cands))
+    return out
+
+
 def cache_shardings(mesh: Mesh, cache_shapes, *, seq_shard: bool = False,
                     mode: str = "feature"):
     """Serving caches.  rank-5 = stacked attn KV / SSD state; rank-4 =

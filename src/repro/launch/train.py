@@ -5,29 +5,128 @@ mesh; on this CPU container it runs reduced configs under a host mesh so the
 whole path (sharded params, pjit'd ISGD step with its cond/while_loop,
 loss-driven LR) is exercised end-to-end.
 
+Two engines:
+
+  * default — pjit/GSPMD over a (data, model) mesh: tensor/FSDP parallel
+    weights, activation-sharding constraints (launch/shardings.py);
+  * ``--data-parallel`` — the shard_map engine (repro.distributed): params
+    and ISGD state replicated, batch sharded over 'data', gradients and the
+    control statistic ψ explicitly all-reduced so every device takes the
+    same accelerate branch (paper §6); input batches ride the
+    double-buffered host->device prefetcher.
+
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 30 --batch 8 --seq 128
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.train --arch internlm2-1.8b --reduced \
+      --data-parallel --steps 30 --batch 16
 """
 from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import ISGDConfig, isgd_init, isgd_step
+from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
 from repro.core.schedule import constant_lr
 from repro.data import FCPRSampler, make_lm_tokens
+from repro.distributed import (PrefetchSampler, batch_sharding,
+                               make_data_parallel_step, replicated)
 from repro.launch import shardings as SH
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_data_mesh, make_host_mesh
 from repro.models import build_model
 from repro.optim import RULES
 from repro.sharding import activation_sharding, rules
 from repro.train.trainer import make_loss_and_grad
+
+
+def frontend_embeds(cfg, batch_size: int):
+    """Constant zero frontend embeddings for vlm/encdec smoke configs —
+    hoisted out of the step loop (they never change across steps)."""
+    if cfg.family == "vlm":
+        shape = (batch_size, cfg.num_image_tokens, cfg.d_model)
+    elif cfg.family == "encdec":
+        shape = (batch_size, cfg.encoder_seq, cfg.d_model)
+    else:
+        return {}
+    return {"frontend_embeds": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def run_data_parallel(args, cfg, model, sampler, rule, icfg, lr_fn):
+    mesh = make_data_mesh()
+    n_dev = mesh.shape["data"]
+    if args.batch % n_dev:
+        raise SystemExit(f"--batch {args.batch} must be a multiple of the "
+                         f"{n_dev} devices (it is split across them)")
+    print(f"arch={cfg.name} engine=data-parallel devices={n_dev} "
+          f"per_device_batch={args.batch // n_dev}")
+
+    init_fn, jstep = make_data_parallel_step(
+        model.loss_fn, rule, icfg, mesh,
+        inconsistent=not args.consistent, lr_fn=lr_fn)
+    params = jax.device_put(model.init(jax.random.PRNGKey(0),
+                                       max_seq=args.seq), replicated(mesh))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M (replicated)")
+    state = init_fn(params)
+
+    b_sh = batch_sharding(mesh)
+    extra = {k: jax.device_put(v, b_sh)
+             for k, v in frontend_embeds(cfg, args.batch).items()}
+    prefetch = PrefetchSampler(
+        sampler, sharding=SH.data_parallel_shardings(mesh, sampler(0)))
+    t0 = time.perf_counter()
+    for j in range(args.steps):
+        batch = dict(prefetch(j), **extra)
+        state, params, m = jstep(state, params, batch)
+        if (j + 1) % 5 == 0 or j == 0:
+            print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                  f"psi_bar={float(m['psi_bar']):.4f} "
+                  f"limit={float(m['limit']):.4f} "
+                  f"accel={bool(m['accelerated'])}")
+    return state, time.perf_counter() - t0
+
+
+def run_pjit(args, cfg, model, sampler, rule, icfg, lr_fn):
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={mesh.size}")
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, max_seq=args.seq)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+
+    lg = make_loss_and_grad(model.loss_fn)
+
+    def step(state, params, batch):
+        if args.consistent:
+            return consistent_step(rule, lg, state, params, batch, lr_fn(0.0))
+        return isgd_step(rule, icfg, lg, state, params, batch, lr_fn(0.0))
+
+    p_sh = SH.params_shardings(mesh, jax.eval_shape(lambda: params))
+    state = isgd_init(rule, icfg, params)
+    s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
+    table = rules.activation_rule_table(mesh, args.batch)
+    extra = frontend_embeds(cfg, args.batch)
+    with mesh, activation_sharding(rules.make_constrain(mesh, table)):
+        params = jax.device_put(params, p_sh)
+        state = jax.device_put(state, s_sh)
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        t0 = time.perf_counter()
+        for j in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
+            batch.update(extra)
+            state, params, m = jstep(state, params, batch)
+            if (j + 1) % 5 == 0 or j == 0:
+                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                      f"psi_bar={float(m['psi_bar']):.4f} "
+                      f"limit={float(m['limit']):.4f} "
+                      f"accel={bool(m['accelerated'])}")
+        dt = time.perf_counter() - t0
+    return state, dt
 
 
 def main():
@@ -45,19 +144,15 @@ def main():
     ap.add_argument("--stop", type=int, default=3)
     ap.add_argument("--n-seqs", type=int, default=64)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="use the shard_map data-parallel ISGD engine with "
+                         "prefetched inputs (replicated params)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    mesh = make_host_mesh(model=args.model_parallel)
-    print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={mesh.size}")
-
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, max_seq=args.seq)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"params: {n_params/1e6:.1f}M")
 
     data = make_lm_tokens(0, args.n_seqs, args.seq, cfg.vocab_size)
     sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
@@ -65,43 +160,14 @@ def main():
     rule = RULES[args.rule]()
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=args.k_sigma,
                       stop=args.stop)
-    lg = make_loss_and_grad(model.loss_fn)
     lr_fn = constant_lr(args.lr)
 
-    def step(state, params, batch):
-        if args.consistent:
-            from repro.core import consistent_step
-            return consistent_step(rule, lg, state, params, batch, lr_fn(0.0))
-        return isgd_step(rule, icfg, lg, state, params, batch, lr_fn(0.0))
-
-    p_sh = SH.params_shardings(mesh, jax.eval_shape(lambda: params))
-    state = isgd_init(rule, icfg, params)
-    s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
-    table = rules.activation_rule_table(mesh, args.batch)
-    with mesh, activation_sharding(rules.make_constrain(mesh, table)):
-        params = jax.device_put(params, p_sh)
-        state = jax.device_put(state, s_sh)
-        jstep = jax.jit(step, donate_argnums=(0, 1))
-        t0 = time.perf_counter()
-        for j in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
-            if cfg.family == "vlm":
-                batch["frontend_embeds"] = jnp.zeros(
-                    (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
-            if cfg.family == "encdec":
-                batch["frontend_embeds"] = jnp.zeros(
-                    (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
-            state, params, m = jstep(state, params, batch)
-            if (j + 1) % 5 == 0 or j == 0:
-                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
-                      f"psi_bar={float(m['psi_bar']):.4f} "
-                      f"limit={float(m['limit']):.4f} "
-                      f"accel={bool(m['accelerated'])}")
-        dt = time.perf_counter() - t0
-        print(f"done: {args.steps} steps in {dt:.1f}s "
-              f"({dt/args.steps*1e3:.0f} ms/step) "
-              f"accelerated={int(state.accel_count)} "
-              f"sub_iters={int(state.sub_iters)}")
+    runner = run_data_parallel if args.data_parallel else run_pjit
+    state, dt = runner(args, cfg, model, sampler, rule, icfg, lr_fn)
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({dt/args.steps*1e3:.0f} ms/step) "
+          f"accelerated={int(state.accel_count)} "
+          f"sub_iters={int(state.sub_iters)}")
 
 
 if __name__ == "__main__":

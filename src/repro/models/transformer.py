@@ -10,9 +10,7 @@ mlp ∈ {swiglu, gelu2, moe}, plus a cross-attention slot for enc-dec decoders.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax

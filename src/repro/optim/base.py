@@ -17,7 +17,7 @@ the gradient is always evaluated at the current iterate.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ match exactly and are copied through).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ import contextlib
 import threading
 from typing import Callable, Optional
 
-import jax
-
 _state = threading.local()
 
 

@@ -9,7 +9,7 @@ replicate — that single rule absorbs every oddity in the assigned archs
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp  # noqa: F401  (jnp.copy used below)
 
 from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
+from repro.core.reduce import LOCAL, ReduceCtx
 from repro.core.schedule import constant_lr
 from repro.optim.base import UpdateRule
 
@@ -64,13 +65,19 @@ def make_loss_and_grad(loss_fn: Callable, micro_batches: int = 1):
 
 def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
                     *, inconsistent: bool = True, lr_fn: Callable = None,
-                    donate: bool = True):
+                    donate: bool = True, reduce_ctx: ReduceCtx = LOCAL):
     """Returns (init_fn, step_fn).
 
     step_fn(state, params, batch, lr_override=None) ->
         (state, params, metrics).  If ``lr_fn`` is given, the LR is derived
     from the running average loss ψ̄ (the paper's loss-driven schedule);
     otherwise pass lr explicitly.
+
+    ``reduce_ctx`` is the pluggable ψ/gradient reduction (core/reduce.py).
+    A non-local context only makes sense when step_fn runs inside a scope
+    binding its axis — the supported wrapper is
+    ``repro.distributed.make_data_parallel_step``, which shares this
+    (init_fn, step_fn) contract.
     """
     lg = make_loss_and_grad(loss_fn)
 
@@ -82,8 +89,10 @@ def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
             from repro.core import control as C
             lr = lr_fn(C.mean(state.queue))
         if inconsistent:
-            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr)
-        return consistent_step(rule, lg, state, params, batch, lr)
+            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
+                             reduce_ctx=reduce_ctx)
+        return consistent_step(rule, lg, state, params, batch, lr,
+                               reduce_ctx=reduce_ctx)
 
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(step_fn, **jit_kwargs)

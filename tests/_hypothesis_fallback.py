@@ -1,0 +1,89 @@
+"""Minimal stand-in for the slice of `hypothesis` the test-suite uses.
+
+The `test` extra pins real hypothesis and CI installs it; this fallback
+exists so the tier-1 suite still *runs* the property tests (as a seeded
+random sweep, no shrinking) on machines where the extra isn't installed —
+e.g. the hermetic reproduction container, which cannot pip install.
+
+Supported surface: ``@given`` over ``st.floats``/``st.integers``/
+``st.lists`` strategies, and ``@settings(max_examples=..., deadline=...)``.
+Anything fancier should import real hypothesis and skip when absent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+_SEED = 20160318        # arXiv:1603.05544 submission date
+
+
+@dataclass(frozen=True)
+class _Strategy:
+    draw: Any           # Callable[[np.random.RandomState], value]
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (imported as ``st``)."""
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, allow_nan=False, width=64):
+        def draw(rng):
+            x = rng.uniform(min_value, max_value)
+            return float(np.float32(x)) if width == 32 else float(x)
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        return _Strategy(lambda rng: int(rng.randint(min_value,
+                                                     max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.randint(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+@dataclass
+class settings:
+    max_examples: int = 100
+    deadline: Any = None
+    extra: dict = field(default_factory=dict)
+
+    def __init__(self, max_examples=100, deadline=None, **extra):
+        self.max_examples = max_examples
+        self.deadline = deadline
+        self.extra = extra
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOT functools.wraps: pytest must see a zero-arg signature, or it
+        # would try to resolve the property arguments as fixtures.
+        def wrapper():
+            n = getattr(fn, "_fallback_settings",
+                        settings()).max_examples
+            rng = np.random.RandomState(_SEED)
+            for i in range(n):
+                drawn = tuple(s.draw(rng) for s in strats)
+                try:
+                    fn(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (fallback fuzzer, "
+                        f"iteration {i}): {drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco

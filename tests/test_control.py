@@ -1,9 +1,13 @@
 """ISGD loss-queue statistics vs a numpy sliding-window oracle."""
-import jax.numpy as jnp
+import jax.numpy as jnp  # noqa: F401  (kept: queue ops return jnp scalars)
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # hermetic container: test extra
+    from _hypothesis_fallback import given, settings, st   # noqa: F401
 
 from repro.core import control
 

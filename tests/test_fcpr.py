@@ -1,7 +1,11 @@
 """FCPR sampling invariants (paper §3.4), property-based."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # hermetic container: test extra
+    from _hypothesis_fallback import given, settings, st   # noqa: F401
 
 from repro.data import FCPRSampler
 

@@ -1,9 +1,7 @@
 """ISGD core behaviour: subproblem descent, conservative bound, control
 flow of the inconsistent step."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ISGDConfig, consistent_step, isgd_init, isgd_step,
                         solve_subproblem)

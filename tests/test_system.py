@@ -5,7 +5,6 @@ These mirror EXPERIMENTS.md E4/E5 but at smoke scale, so the claims are
 guarded by CI rather than only by the benchmark harness.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
