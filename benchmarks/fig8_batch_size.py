@@ -44,7 +44,8 @@ def run():
             params0, loss_fn, momentum(0.9), sampler,
             steps=min(steps, scaled(400, lo=120)), lr=0.05,
             inconsistent=False,
-            isgd_cfg=ISGDConfig(n_batches=sampler.n_batches))
+            isgd_cfg=ISGDConfig(n_batches=sampler.n_batches),
+            step_sync=True)   # Eq.21 fit needs true per-step wall deltas
         wall = np.array(log.wall)
         psi = np.array(log.psi_bar)
         hit = np.where(psi <= target_loss)[0]

@@ -16,9 +16,16 @@ the normal argparse pass.  The global --batch must be a multiple of N
 prefetcher.  (Setting XLA_FLAGS yourself works too and
 takes precedence; --devices is a convenience for single-host smoke runs.)
 
+``--chunk-steps K`` switches both legs to the fused engine (ISSUE 2): the
+permuted epoch lives on device in a ``DeviceRing`` and each host dispatch
+runs K full ISGD steps inside a ``lax.scan``, bit-exact with the per-step
+engine; ``--device-ring`` keeps the per-step engine but serves batches from
+the ring (one upload instead of one transfer per step).
+
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --steps 200
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --params 100 --steps 300
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --devices 8 --batch 16
+  PYTHONPATH=src python examples/train_isgd_vs_sgd.py --chunk-steps 20
 """
 from __future__ import annotations
 
@@ -55,13 +62,15 @@ import numpy as np            # noqa: E402
 
 from repro.configs import get_config                       # noqa: E402
 from repro.core import ISGDConfig                          # noqa: E402
-from repro.data import FCPRSampler, make_lm_tokens         # noqa: E402
-from repro.distributed import (make_data_parallel_step,    # noqa: E402
-                               prefetched)
+from repro.data import (DeviceRing, FCPRSampler,           # noqa: E402
+                        make_lm_tokens, ring_or_prefetch)
+from repro.distributed import (                            # noqa: E402
+    make_chunked_data_parallel_step, make_data_parallel_step, prefetched)
 from repro.launch.mesh import make_data_mesh               # noqa: E402
 from repro.models import build_model                       # noqa: E402
 from repro.optim import momentum                           # noqa: E402
-from repro.train import checkpoints, make_train_step       # noqa: E402
+from repro.train import (checkpoints,                      # noqa: E402
+                         make_chunked_train_step, make_train_step)
 from repro.train.trainer import TrainLog                   # noqa: E402
 
 
@@ -87,6 +96,13 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="split the host into N XLA devices and use the "
                          "data-parallel engine (see module docstring)")
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="K>1 = fused engine: K steps per dispatch over the "
+                         "device-resident FCPR ring (steps rounded up to "
+                         "whole chunks); bit-exact with per-step")
+    ap.add_argument("--device-ring", action="store_true",
+                    help="feed the per-step engine from the device ring "
+                         "(implied by --chunk-steps > 1)")
     ap.add_argument("--ckpt", default="experiments/e2e_lm.npz")
     args = ap.parse_args()
 
@@ -108,23 +124,55 @@ def main():
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
     mesh = make_data_mesh() if args.devices > 1 else None
 
+    K = args.chunk_steps
+    ring = None
+    if K > 1:
+        args.steps = -(-args.steps // K) * K         # whole chunks
+        # one epoch upload serves both legs (identical permuted data)
+        ring = DeviceRing(sampler.epoch_arrays(), args.batch, mesh=mesh)
     results = {}
     for name, inconsistent in (("sgd", False), ("isgd", True)):
         lr_fn = lambda _: jnp.asarray(args.lr)       # noqa: E731
+        params = jax.tree.map(jnp.copy, params0)
+        log = TrainLog()
+        if K > 1:
+            # fused engine: K steps per dispatch, metrics fetched per chunk
+            if mesh is not None:
+                init_fn, chunk_fn = make_chunked_data_parallel_step(
+                    model.loss_fn, momentum(0.9), icfg, mesh,
+                    chunk_steps=K, inconsistent=inconsistent, lr_fn=lr_fn)
+            else:
+                init_fn, chunk_fn = make_chunked_train_step(
+                    model.loss_fn, momentum(0.9), icfg,
+                    chunk_steps=K, inconsistent=inconsistent, lr_fn=lr_fn)
+            state = init_fn(params)
+            t0 = time.perf_counter()
+            for c in range(args.steps // K):
+                state, params, ms = chunk_fn(state, params, ring.arrays,
+                                             c * K)
+                log.extend(ms, time.perf_counter() - t0)
+                print(f"[{name}] step {(c+1)*K:4d} loss={log.losses[-1]:.4f} "
+                      f"ψ̄={log.psi_bar[-1]:.4f} accel={log.accelerated[-1]}")
+            results[name] = log
+            if name == "isgd":
+                checkpoints.save(args.ckpt, params,
+                                 extra={"steps": args.steps, "arch": cfg.name})
+                print(f"checkpoint -> {args.ckpt}")
+            continue
         if mesh is not None:
             init_fn, step_fn = make_data_parallel_step(
                 model.loss_fn, momentum(0.9), icfg, mesh,
                 inconsistent=inconsistent, lr_fn=lr_fn)
-            feed = prefetched(sampler, mesh)
+            feed = ring_or_prefetch(sampler, mesh=mesh) \
+                if args.device_ring else prefetched(sampler, mesh)
         else:
             init_fn, step_fn = make_train_step(
                 model.loss_fn, momentum(0.9), icfg,
                 inconsistent=inconsistent, lr_fn=lr_fn)
-            feed = lambda j: {k: jnp.asarray(v)      # noqa: E731
-                              for k, v in sampler(j).items()}
-        params = jax.tree.map(jnp.copy, params0)
+            feed = ring_or_prefetch(sampler) if args.device_ring else \
+                (lambda j: {k: jnp.asarray(v)        # noqa: E731
+                            for k, v in sampler(j).items()})
         state = init_fn(params)
-        log = TrainLog()
         t0 = time.perf_counter()
         for j in range(args.steps):
             state, params, m = step_fn(state, params, feed(j))

@@ -1,3 +1,4 @@
+from repro.data.device_ring import DeviceRing, ring_or_prefetch
 from repro.data.fcpr import ExplicitBatches, FCPRSampler
 from repro.data.synthetic import (
     cifar_like,
@@ -10,7 +11,8 @@ from repro.data.synthetic import (
 )
 
 __all__ = [
-    "FCPRSampler", "ExplicitBatches", "make_classification", "mnist_like",
+    "FCPRSampler", "ExplicitBatches", "DeviceRing", "ring_or_prefetch",
+    "make_classification", "mnist_like",
     "cifar_like", "imagenet_like", "single_class_batches", "iid_batches",
     "make_lm_tokens",
 ]

@@ -1,0 +1,138 @@
+"""Device-resident FCPR ring (ROADMAP: "prefetch depth tuning + device-
+resident FCPR ring").
+
+FCPR sampling (paper §3.4) makes batch identity a pure function of the step
+index — ``t = j mod n_b`` — so the whole permuted epoch can be uploaded to
+device ONCE and every batch served as a ``lax.dynamic_slice`` on the ring.
+That removes the per-step host→device copy (and the numpy slice feeding it)
+from the hot path entirely, which is what lets the chunked trainer
+(``repro.train.chunked``) run K steps per host dispatch with zero host
+involvement in batch selection.
+
+Two layouts:
+
+  * **unsharded** (``mesh=None``): the epoch lives replicated/on the default
+    device; batch t is rows ``[t*bs, (t+1)*bs)``.
+  * **sharded** (``mesh`` given): the epoch is re-laid-out so each device's
+    contiguous block holds *its* shard of every batch in cycle order —
+    ``v.reshape(n_b, n_dev, bs/n_dev, ...)`` transposed to put the device
+    axis first — then placed with ``NamedSharding(mesh, P(axis))``.  Inside
+    ``shard_map`` a device slices ``[t*bs_local, (t+1)*bs_local)`` of its
+    local block and gets exactly the rows the per-step engine's
+    ``P(axis)``-sharded global batch would have given it, so ring and
+    host-sampler feeds are bit-identical.
+
+``ring_or_prefetch`` is the configurable-byte-budget front door: epochs that
+fit are promoted to a ``DeviceRing``; epochs that don't fall back to the
+double-buffered ``PrefetchSampler`` (H2D overlap instead of residency).
+
+The ring preserves the sampler protocol (``__call__(j)``, ``n_batches``,
+``batch_size``, ``batch_index``), so per-step engines can consume it
+unchanged; chunked engines take ``ring.arrays`` directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BYTE_BUDGET = 256 * 1024 * 1024     # 256 MiB of epoch per replica
+
+
+def _shard_layout(v: np.ndarray, n_batches: int, n_dev: int) -> np.ndarray:
+    """(n_b*bs, ...) -> same shape, rows regrouped so device d's contiguous
+    1/n_dev block is [batch0 shard d, batch1 shard d, ...]."""
+    bs = v.shape[0] // n_batches
+    bsl = bs // n_dev
+    r = v.reshape(n_batches, n_dev, bsl, *v.shape[1:])
+    return np.ascontiguousarray(
+        r.swapaxes(0, 1).reshape(n_batches * bs, *v.shape[1:]))
+
+
+class DeviceRing:
+    def __init__(self, epoch_arrays: Dict[str, np.ndarray], batch_size: int,
+                 *, mesh=None, axis: str = "data"):
+        n = next(iter(epoch_arrays.values())).shape[0]
+        for v in epoch_arrays.values():
+            assert v.shape[0] == n, "epoch arrays must share the leading dim"
+        assert n % batch_size == 0, (n, batch_size)
+        self.batch_size = batch_size
+        self.n_batches = n // batch_size
+        self.mesh = mesh
+        self.axis = axis
+
+        if mesh is None:
+            self.n_devices = 1
+            self.local_batch_size = batch_size
+            self.arrays = {k: jax.device_put(np.ascontiguousarray(v))
+                           for k, v in epoch_arrays.items()}
+            self._slice = jax.jit(self._slice_unsharded)
+        else:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            n_dev = mesh.shape[axis]
+            assert batch_size % n_dev == 0, \
+                f"batch {batch_size} not divisible by {n_dev} '{axis}' devices"
+            self.n_devices = n_dev
+            self.local_batch_size = batch_size // n_dev
+            sh = NamedSharding(mesh, P(axis))
+            self.arrays = {
+                k: jax.device_put(_shard_layout(np.asarray(v),
+                                                self.n_batches, n_dev), sh)
+                for k, v in epoch_arrays.items()}
+            from jax.experimental.shard_map import shard_map
+            sliced = shard_map(self._slice_local, mesh=mesh,
+                               in_specs=(P(axis), P()), out_specs=P(axis),
+                               check_rep=False)
+            self._slice = jax.jit(sliced)
+
+    # -- slicing --------------------------------------------------------
+    def _slice_unsharded(self, arrays, t):
+        bs = self.batch_size
+        return {k: jax.lax.dynamic_slice_in_dim(v, t * bs, bs)
+                for k, v in arrays.items()}
+
+    def _slice_local(self, arrays, t):
+        bs = self.local_batch_size
+        return {k: jax.lax.dynamic_slice_in_dim(v, t * bs, bs)
+                for k, v in arrays.items()}
+
+    # -- sampler protocol ----------------------------------------------
+    def batch_index(self, j: int) -> int:
+        return j % self.n_batches
+
+    def __call__(self, j: int) -> Dict[str, jax.Array]:
+        """Batch ``t = j mod n_b`` as device arrays — on a sharded ring the
+        output is the *global* batch laid out like ``batch_sharding`` (leading
+        dim over ``axis``), directly consumable by the per-step engines."""
+        t = jnp.asarray(self.batch_index(j), jnp.int32)
+        return self._slice(self.arrays, t)
+
+    # -- sizing ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in self.arrays.values())
+
+
+def ring_or_prefetch(sampler, *, mesh=None, axis: str = "data",
+                     byte_budget: Optional[int] = DEFAULT_BYTE_BUDGET,
+                     prefetch_depth: int = 2):
+    """Promote ``sampler``'s permuted epoch to a :class:`DeviceRing` when
+    its *per-replica* share fits ``byte_budget`` bytes (``None`` = always
+    fits; a sharded ring puts only 1/n_dev of the epoch on each device);
+    otherwise fall back to the double-buffered ``PrefetchSampler`` over the
+    same sampler, sharded for ``mesh`` if one is given.  Either return
+    value satisfies the sampler protocol and yields bit-identical batches.
+
+    The size check uses ``sampler.epoch_nbytes()`` so an over-budget epoch
+    is never materialized just to be discarded."""
+    if byte_budget is not None:
+        n_dev = mesh.shape[axis] if mesh is not None else 1
+        if sampler.epoch_nbytes() > byte_budget * n_dev:
+            from repro.distributed.prefetch import prefetched
+            return prefetched(sampler, mesh, axis=axis, depth=prefetch_depth)
+    return DeviceRing(sampler.epoch_arrays(), sampler.batch_size,
+                      mesh=mesh, axis=axis)

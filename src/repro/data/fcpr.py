@@ -9,6 +9,14 @@ therefore deterministic, which is what gives the ISGD loss queue its
 (paper §3.3 "insufficient shuffling" form of Sampling Bias): only that
 fraction of elements participate in the permutation, the rest stay in
 class-sorted order.
+
+Zero-copy contract: the permuted epoch is materialised ONCE as C-contiguous
+arrays (``np.ascontiguousarray`` in ``__init__``), so every batch
+``__call__`` returns is a contiguous leading-axis *view* — no per-batch copy
+on the host, and ``jax.device_put`` can transfer it without a staging copy.
+``epoch_arrays()`` exposes the whole permuted epoch for consumers that want
+to upload it once (the device-resident ring in ``repro.data.device_ring``)
+instead of re-slicing per batch.
 """
 from __future__ import annotations
 
@@ -45,7 +53,22 @@ class FCPRSampler:
         """t = j mod (n_d / n_b) — the paper's fixed cycle."""
         return j % self.n_batches
 
+    def epoch_arrays(self) -> Dict[str, np.ndarray]:
+        """The whole permuted epoch (``n_batches * batch_size`` rows per key)
+        as C-contiguous arrays; batch t is rows [t*bs, (t+1)*bs).  This is
+        the ingestion point for ``DeviceRing`` — one upload, no per-batch
+        re-slicing."""
+        return self.arrays
+
+    def epoch_nbytes(self) -> int:
+        """Host bytes of one permuted epoch (ring byte-budget check)."""
+        return sum(v.nbytes for v in self.arrays.values())
+
     def __call__(self, j: int) -> Dict[str, np.ndarray]:
+        """Batch ``t = j mod n_b`` as zero-copy C-contiguous views.
+
+        Leading-axis slices of C-contiguous arrays are themselves
+        C-contiguous, so these views feed ``jax.device_put`` directly."""
         t = self.batch_index(j)
         lo, hi = t * self.batch_size, (t + 1) * self.batch_size
         return {k: v[lo:hi] for k, v in self.arrays.items()}
@@ -62,6 +85,18 @@ class ExplicitBatches:
 
     def batch_index(self, j: int) -> int:
         return j % self.n_batches
+
+    def epoch_arrays(self):
+        """Concatenated fixed cycle (batch t = rows [t*bs, (t+1)*bs)), so
+        ``DeviceRing`` can ingest explicit batches too."""
+        keys = self.batches[0].keys()
+        return {k: np.ascontiguousarray(
+                    np.concatenate([np.asarray(b[k]) for b in self.batches]))
+                for k in keys}
+
+    def epoch_nbytes(self) -> int:
+        return sum(np.asarray(v).nbytes
+                   for b in self.batches for v in b.values())
 
     def __call__(self, j: int):
         return self.batches[self.batch_index(j)]

@@ -19,6 +19,7 @@ _EXPORTS = {
     "AxisReduce": "repro.core.reduce",
     "LOCAL": "repro.core.reduce",
     "make_data_parallel_step": "repro.distributed.data_parallel",
+    "make_chunked_data_parallel_step": "repro.distributed.data_parallel",
     "batch_sharding": "repro.distributed.data_parallel",
     "replicated": "repro.distributed.data_parallel",
     "data_axis_size": "repro.distributed.data_parallel",

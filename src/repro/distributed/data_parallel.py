@@ -31,7 +31,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
 from repro.core.reduce import AxisReduce
 from repro.optim.base import UpdateRule
-from repro.train.trainer import make_loss_and_grad
+from repro.train.chunked import chunk_over_ring
+from repro.train.trainer import make_loss_and_grad, make_step_core
 
 
 def data_axis_size(mesh: Mesh, axis: str = "data") -> int:
@@ -93,3 +94,46 @@ def make_data_parallel_step(loss_fn: Callable, rule: UpdateRule,
 
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(step_fn, **jit_kwargs)
+
+
+def make_chunked_data_parallel_step(loss_fn: Callable, rule: UpdateRule,
+                                    isgd_cfg: ISGDConfig, mesh: Mesh, *,
+                                    chunk_steps: int, axis: str = "data",
+                                    inconsistent: bool = True,
+                                    lr_fn: Optional[Callable] = None,
+                                    micro_batches: int = 1,
+                                    donate: bool = True):
+    """Fused K-steps-per-dispatch twin of ``make_data_parallel_step``.
+
+    The ``lax.scan`` over ``repro.train.chunked.chunk_over_ring`` runs
+    *inside* the ``shard_map``: each device slices its own batch shard out
+    of its local block of the sharded :class:`DeviceRing` (layout documented
+    in ``repro.data.device_ring``) and runs K full ISGD steps without the
+    host in the loop.  ψ/grads pmean through ``AxisReduce`` exactly as in
+    the per-step engine, so cond/while control flow — and therefore the
+    scan carry — stays replicated across devices.
+
+    Returns ``(init_fn, chunk_fn)``; ``chunk_fn(state, params, ring_arrays,
+    j0) -> (state, params, stacked_metrics)`` with ``ring_arrays`` sharded
+    ``P(axis)`` (a sharded ``DeviceRing``'s ``.arrays``), metrics stacked
+    (chunk_steps,) and replicated, and ``(state, params)`` donated.
+    """
+    assert lr_fn is not None, "chunked engine needs lr_fn (no per-step host)"
+    init_fn, step_fn = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=AxisReduce(axis), micro_batches=micro_batches)
+    device_chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
+
+    # check_rep=False for the same reason as the per-step engine: the rep
+    # checker can't see through the cond/while bodies inside the scan.
+    sharded = shard_map(device_chunk, mesh=mesh,
+                        in_specs=(P(), P(), P(axis), P()),
+                        out_specs=(P(), P(), P()),
+                        check_rep=False)
+
+    def chunk_fn(state, params, ring_arrays, j0):
+        return sharded(state, params, ring_arrays,
+                       jnp.asarray(j0, jnp.int32))
+
+    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+    return init_fn, jax.jit(chunk_fn, **jit_kwargs)

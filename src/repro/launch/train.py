@@ -15,11 +15,21 @@ Two engines:
     same accelerate branch (paper §6); input batches ride the
     double-buffered host->device prefetcher.
 
+Two input/dispatch accelerators compose with both engines:
+
+  * ``--device-ring`` — serve batches from the device-resident FCPR ring
+    (one epoch upload, batches by dynamic_slice) instead of per-step host
+    transfers; falls back to the prefetcher when the epoch busts the byte
+    budget;
+  * ``--chunk-steps K`` — the fused engine: K full ISGD steps per host
+    dispatch (lax.scan over the ring, bit-exact with per-step; the step
+    count is rounded up to whole chunks).
+
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 30 --batch 8 --seq 128
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.train --arch internlm2-1.8b --reduced \
-      --data-parallel --steps 30 --batch 16
+      --data-parallel --chunk-steps 8 --steps 32 --batch 16
 """
 from __future__ import annotations
 
@@ -29,17 +39,21 @@ import time
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs import get_config
 from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
 from repro.core.schedule import constant_lr
-from repro.data import FCPRSampler, make_lm_tokens
+from repro.data import DeviceRing, FCPRSampler, make_lm_tokens, ring_or_prefetch
 from repro.distributed import (PrefetchSampler, batch_sharding,
+                               make_chunked_data_parallel_step,
                                make_data_parallel_step, replicated)
 from repro.launch import shardings as SH
 from repro.launch.mesh import make_data_mesh, make_host_mesh
 from repro.models import build_model
 from repro.optim import RULES
 from repro.sharding import activation_sharding, rules
+from repro.train.chunked import chunk_over_ring
 from repro.train.trainer import make_loss_and_grad
 
 
@@ -55,6 +69,30 @@ def frontend_embeds(cfg, batch_size: int):
     return {"frontend_embeds": jnp.zeros(shape, jnp.bfloat16)}
 
 
+def ring_epoch(cfg, sampler, batch_size: int):
+    """Epoch arrays for a ``DeviceRing``, with the constant frontend extras
+    tiled per-sample so an in-scan ring slice reproduces exactly the batch
+    dict the per-step loop would have assembled."""
+    epoch = dict(sampler.epoch_arrays())
+    for k, v in frontend_embeds(cfg, batch_size).items():
+        arr = np.asarray(v)
+        epoch[k] = np.tile(arr, (sampler.n_batches,) + (1,) * (arr.ndim - 1))
+    return epoch
+
+
+def _drive_chunks(jchunk, state, params, ring, steps: int, k: int):
+    """Run ``steps`` (rounded up to whole chunks) through a fused chunk fn,
+    printing the last step of each chunk.  Returns (state, total_steps)."""
+    n_chunks = -(-steps // k)
+    for c in range(n_chunks):
+        state, params, ms = jchunk(state, params, ring.arrays, c * k)
+        print(f"step {(c+1)*k:4d} loss={float(ms['loss'][-1]):.4f} "
+              f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
+              f"limit={float(ms['limit'][-1]):.4f} "
+              f"accel={bool(ms['accelerated'][-1])}")
+    return state, n_chunks * k
+
+
 def run_data_parallel(args, cfg, model, sampler, rule, icfg, lr_fn):
     mesh = make_data_mesh()
     n_dev = mesh.shape["data"]
@@ -62,25 +100,44 @@ def run_data_parallel(args, cfg, model, sampler, rule, icfg, lr_fn):
         raise SystemExit(f"--batch {args.batch} must be a multiple of the "
                          f"{n_dev} devices (it is split across them)")
     print(f"arch={cfg.name} engine=data-parallel devices={n_dev} "
-          f"per_device_batch={args.batch // n_dev}")
+          f"per_device_batch={args.batch // n_dev} "
+          f"chunk_steps={args.chunk_steps}")
 
-    init_fn, jstep = make_data_parallel_step(
-        model.loss_fn, rule, icfg, mesh,
-        inconsistent=not args.consistent, lr_fn=lr_fn)
     params = jax.device_put(model.init(jax.random.PRNGKey(0),
                                        max_seq=args.seq), replicated(mesh))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"params: {n_params/1e6:.1f}M (replicated)")
+
+    if args.chunk_steps > 1:
+        # fused engine: sharded device ring + K steps per dispatch
+        ring = DeviceRing(ring_epoch(cfg, sampler, args.batch), args.batch,
+                          mesh=mesh)
+        init_fn, jchunk = make_chunked_data_parallel_step(
+            model.loss_fn, rule, icfg, mesh, chunk_steps=args.chunk_steps,
+            inconsistent=not args.consistent, lr_fn=lr_fn)
+        state = init_fn(params)
+        t0 = time.perf_counter()
+        state, args.steps = _drive_chunks(jchunk, state, params, ring,
+                                          args.steps, args.chunk_steps)
+        return state, time.perf_counter() - t0
+
+    init_fn, jstep = make_data_parallel_step(
+        model.loss_fn, rule, icfg, mesh,
+        inconsistent=not args.consistent, lr_fn=lr_fn)
     state = init_fn(params)
 
     b_sh = batch_sharding(mesh)
     extra = {k: jax.device_put(v, b_sh)
              for k, v in frontend_embeds(cfg, args.batch).items()}
-    prefetch = PrefetchSampler(
-        sampler, sharding=SH.data_parallel_shardings(mesh, sampler(0)))
+    if args.device_ring:
+        feed = ring_or_prefetch(sampler, mesh=mesh)   # ring if it fits
+        print(f"input: {type(feed).__name__}")
+    else:
+        feed = PrefetchSampler(
+            sampler, sharding=SH.data_parallel_shardings(mesh, sampler(0)))
     t0 = time.perf_counter()
     for j in range(args.steps):
-        batch = dict(prefetch(j), **extra)
+        batch = dict(feed(j), **extra)
         state, params, m = jstep(state, params, batch)
         if (j + 1) % 5 == 0 or j == 0:
             print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
@@ -114,11 +171,23 @@ def run_pjit(args, cfg, model, sampler, rule, icfg, lr_fn):
     with mesh, activation_sharding(rules.make_constrain(mesh, table)):
         params = jax.device_put(params, p_sh)
         state = jax.device_put(state, s_sh)
-        jstep = jax.jit(step, donate_argnums=(0, 1))
         t0 = time.perf_counter()
+        if args.chunk_steps > 1:
+            # fused engine under pjit: scan over the (unsharded) ring; GSPMD
+            # re-lays-out the sliced batch per the activation constraints
+            ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
+                              args.batch)
+            jchunk = jax.jit(
+                chunk_over_ring(step, icfg.n_batches, args.chunk_steps),
+                donate_argnums=(0, 1))
+            state, args.steps = _drive_chunks(jchunk, state, params, ring,
+                                              args.steps, args.chunk_steps)
+            return state, time.perf_counter() - t0
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        feed = ring_or_prefetch(sampler) if args.device_ring else \
+            (lambda j: {k: jnp.asarray(v) for k, v in sampler(j).items()})
         for j in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in sampler(j).items()}
-            batch.update(extra)
+            batch = dict(feed(j), **extra)
             state, params, m = jstep(state, params, batch)
             if (j + 1) % 5 == 0 or j == 0:
                 print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
@@ -147,6 +216,14 @@ def main():
     ap.add_argument("--data-parallel", action="store_true",
                     help="use the shard_map data-parallel ISGD engine with "
                          "prefetched inputs (replicated params)")
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="K>1 = fused engine: K ISGD steps per dispatch via "
+                         "lax.scan over the device-resident FCPR ring "
+                         "(bit-exact with the per-step engine)")
+    ap.add_argument("--device-ring", action="store_true",
+                    help="per-step engine fed from the device-resident "
+                         "FCPR ring instead of host batches (implied by "
+                         "--chunk-steps > 1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -1,5 +1,8 @@
 from repro.train import checkpoints
-from repro.train.trainer import TrainLog, make_loss_and_grad, make_train_step, train
+from repro.train.chunked import chunk_over_ring, make_chunked_train_step
+from repro.train.trainer import (TrainLog, make_loss_and_grad, make_step_core,
+                                 make_train_step, train)
 
-__all__ = ["make_train_step", "make_loss_and_grad", "train", "TrainLog",
+__all__ = ["make_train_step", "make_step_core", "make_chunked_train_step",
+           "chunk_over_ring", "make_loss_and_grad", "train", "TrainLog",
            "checkpoints"]

@@ -63,6 +63,38 @@ def make_loss_and_grad(loss_fn: Callable, micro_batches: int = 1):
     return lg
 
 
+def make_step_core(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
+                   *, inconsistent: bool = True, lr_fn: Callable = None,
+                   reduce_ctx: ReduceCtx = LOCAL, micro_batches: int = 1):
+    """Un-jitted ``(init_fn, step_fn)`` — the traceable heart shared by the
+    jitted per-step engine (``make_train_step``) and the fused multi-step
+    scan engine (``repro.train.chunked``), so both run literally the same
+    step computation.
+
+    When ``lr`` is not passed explicitly, ``lr_fn`` reads ψ̄ from the queue
+    *before* this step's loss is pushed — i.e. the LR is driven by the
+    previous step's statistics (Alg.1 line 19).  The chunked engine relies
+    on this one-step lag being inside the step, not the host loop, for its
+    bit-exact parity.
+    """
+    lg = make_loss_and_grad(loss_fn, micro_batches)
+
+    def init_fn(params):
+        return isgd_init(rule, isgd_cfg, params)
+
+    def step_fn(state, params, batch, lr=None):
+        if lr is None:
+            from repro.core import control as C
+            lr = lr_fn(C.mean(state.queue))
+        if inconsistent:
+            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
+                             reduce_ctx=reduce_ctx)
+        return consistent_step(rule, lg, state, params, batch, lr,
+                               reduce_ctx=reduce_ctx)
+
+    return init_fn, step_fn
+
+
 def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
                     *, inconsistent: bool = True, lr_fn: Callable = None,
                     donate: bool = True, reduce_ctx: ReduceCtx = LOCAL):
@@ -79,21 +111,9 @@ def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
     ``repro.distributed.make_data_parallel_step``, which shares this
     (init_fn, step_fn) contract.
     """
-    lg = make_loss_and_grad(loss_fn)
-
-    def init_fn(params):
-        return isgd_init(rule, isgd_cfg, params)
-
-    def step_fn(state, params, batch, lr=None):
-        if lr is None:
-            from repro.core import control as C
-            lr = lr_fn(C.mean(state.queue))
-        if inconsistent:
-            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
-                             reduce_ctx=reduce_ctx)
-        return consistent_step(rule, lg, state, params, batch, lr,
-                               reduce_ctx=reduce_ctx)
-
+    init_fn, step_fn = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=reduce_ctx)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(step_fn, **jit_kwargs)
 
@@ -117,12 +137,35 @@ class TrainLog:
         self.sub_iters.append(int(metrics["sub_iters"]))
         self.wall.append(wall)
 
+    def extend(self, stacked: Dict[str, Any], wall: float):
+        """Ingest one chunk of the fused engine: ``stacked`` holds (K,)
+        leading-dim metric arrays from the on-device ``lax.scan``, fetched in
+        ONE host transfer here (the only sync per chunk).  All K steps get
+        the chunk-end ``wall`` — the host has no per-step timestamps inside
+        a fused dispatch, and pretending otherwise would fabricate data."""
+        import numpy as np
+        host = {k: np.asarray(v) for k, v in stacked.items()
+                if k != "aux"}
+        for i in range(len(host["loss"])):
+            self.append({k: v[i] for k, v in host.items()}, wall)
+
 
 def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
           inconsistent: bool = True, isgd_cfg: Optional[ISGDConfig] = None,
           lr_fn: Callable = None, log_every: int = 0,
-          eval_fn: Callable = None, eval_every: int = 0):
-    """Simple host loop over FCPR batches (CPU reproduction path)."""
+          eval_fn: Callable = None, eval_every: int = 0,
+          step_sync: bool = False):
+    """Simple host loop over FCPR batches (CPU reproduction path).
+
+    Metrics are device scalars; converting them to python floats blocks, so
+    the loop defers that to log/eval boundaries (and once at the end) rather
+    than serializing host and device every step — steps in between are
+    dispatched back-to-back and XLA's async runtime pipelines them.  The
+    recorded ``wall`` for a deferred step is its *dispatch* time; the flush
+    boundary is where the host actually observes completion.  Timing studies
+    that need true per-step wall deltas (benchmarks/fig8_batch_size.py's
+    Eq.21 fit) must pass ``step_sync=True`` to restore the per-step barrier.
+    """
     if isgd_cfg is None:
         isgd_cfg = ISGDConfig(n_batches=sampler.n_batches)
     if lr_fn is None:
@@ -133,16 +176,27 @@ def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
     state = init_fn(params)
     log = TrainLog()
     evals = []
+    pending = []                              # un-synced (metrics, wall)
     t0 = time.perf_counter()
+
+    def flush():
+        for m, w in pending:
+            log.append(m, w)                  # float() here is the sync
+        pending.clear()
+
     for j in range(steps):
         batch = sampler(j)
         state, params, metrics = step_fn(state, params, batch)
-        jax.block_until_ready(metrics["loss"])
-        log.append(metrics, time.perf_counter() - t0)
+        if step_sync:
+            jax.block_until_ready(metrics["loss"])
+        pending.append((metrics, time.perf_counter() - t0))
         if log_every and (j + 1) % log_every == 0:
+            flush()
             print(f"  step {j+1:5d} loss={log.losses[-1]:.4f} "
                   f"psi_bar={log.psi_bar[-1]:.4f} limit={log.limits[-1]:.4f} "
                   f"accel={log.accelerated[-1]}")
         if eval_fn and eval_every and (j + 1) % eval_every == 0:
+            flush()
             evals.append((j + 1, time.perf_counter() - t0, eval_fn(params)))
+    flush()
     return params, state, log, evals
