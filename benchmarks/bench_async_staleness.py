@@ -1,0 +1,182 @@
+"""Async parameter-server staleness study: workers × max_staleness sweep.
+
+The paper's §6.2 scaling mode trades synchronization cost for gradient
+staleness; this benchmark measures both sides of that trade on the
+lenet-8x8 config (the dispatch-bound small-CNN regime the fused-engine
+bench established):
+
+  * **throughput** — total server pushes per second for each
+    (workers, max_staleness) cell, plus the synchronous per-step engine as
+    the zero-staleness/zero-parallelism baseline;
+  * **statistical cost** — final-epoch mean ψ̄ on the same global FCPR
+    cycle and step budget, with the observed version-staleness τ
+    distribution (mean/max vs the gate's ``(s+1)·N − 1`` bound) and the
+    ISGD accelerate count, so the JSON records how much the control loop
+    still fires as staleness grows.
+
+Writes ``BENCH_async_staleness.json`` (checked in at the repo root) — the
+async twin of ``BENCH_train_throughput.json``.  ``--smoke`` is the CI mode:
+reduced cells/steps under both matrix device counts, artifact uploaded.
+
+  PYTHONPATH=src python benchmarks/bench_async_staleness.py
+  PYTHONPATH=src python benchmarks/bench_async_staleness.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+WORKERS = (1, 2, 4)
+STALENESS = (0, 1, 4)
+
+
+def _setup(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.paper_cnns import CNNConfig, ConvSpec
+    from repro.core import ISGDConfig
+    from repro.data import FCPRSampler, make_classification
+    from repro.models import cnn_loss_fn, init_cnn
+    from repro.optim import momentum
+
+    cfg = CNNConfig(name="lenet-8x8", image_size=8, channels=1,
+                    num_classes=10,
+                    convs=(ConvSpec(4, 3, pool=2), ConvSpec(8, 3, pool=2)),
+                    hidden=(24,))
+    data = make_classification(0, args.batch * args.n_batches,
+                               cfg.image_size, cfg.channels, 10,
+                               noise=0.6, class_spread=2.0)
+    sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.5, stop=3,
+                      zeta=0.02)
+    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)
+    # ψ̄-driven LR so the async one-step queue lag is on the measured path
+    lr_fn = lambda pb: jnp.asarray(0.05) * jnp.clip(pb / 2.3, 0.5, 1.0)
+    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+    return loss_fn, momentum(0.9), icfg, lr_fn, params0, sampler
+
+
+def _sync_cell(args, setup):
+    import jax
+
+    from repro.train import make_train_step
+
+    loss_fn, rule, icfg, lr_fn, params0, sampler = setup
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=lr_fn,
+                                    donate=False)
+    feed = lambda j: {k: jax.numpy.asarray(v) for k, v in sampler(j).items()}
+    _, _, m = step(init_fn(params0), params0, feed(0))  # compile off-trajectory
+    jax.block_until_ready(m["loss"])
+    p = jax.tree.map(lambda x: x, params0)
+    s = init_fn(p)
+    psi = []
+    t0 = time.perf_counter()
+    for j in range(args.steps):
+        s, p, m = step(s, p, feed(j))
+        psi.append(m["psi_bar"])
+    jax.block_until_ready(psi[-1])
+    dt = time.perf_counter() - t0
+    n_b = sampler.n_batches
+    final = sum(float(x) for x in psi[-n_b:]) / n_b
+    return {"engine": "sync", "workers": 1, "max_staleness": 0,
+            "steps": args.steps, "updates_per_s": args.steps / dt,
+            "wall_s": dt, "final_psi_bar": final,
+            "accelerated": int(s.accel_count), "mean_tau": 0.0, "max_tau": 0}
+
+
+def _async_cell(args, setup, workers, max_staleness):
+    from repro.distributed import AsyncPSCoordinator, staleness_reduce_from_spec
+
+    loss_fn, rule, icfg, lr_fn, params0, sampler = setup
+    coord = AsyncPSCoordinator(
+        loss_fn, rule, icfg, workers=workers, max_staleness=max_staleness,
+        lr_fn=lr_fn, reduce_ctx=staleness_reduce_from_spec(args.decay))
+    # compile propose + the accelerate subproblem + server ops off the clock
+    coord.warmup(params0, sampler)
+    t0 = time.perf_counter()
+    _, state, records = coord.run(params0, sampler, args.steps)
+    dt = time.perf_counter() - t0
+    n_b = sampler.n_batches
+    taus = [r["tau"] for r in records]
+    final = sum(r["psi_bar"] for r in records[-n_b:]) / n_b
+    return {"engine": "async-ps", "workers": workers,
+            "max_staleness": max_staleness, "steps": len(records),
+            "updates_per_s": len(records) / dt, "wall_s": dt,
+            "final_psi_bar": final, "accelerated": int(state.accel_count),
+            "mean_tau": sum(taus) / len(taus), "max_tau": max(taus),
+            "tau_bound": (2 * max_staleness + 1) * (workers - 1)}
+
+
+def run(args) -> dict:
+    import jax
+
+    setup = _setup(args)
+    cells = [_sync_cell(args, setup)]
+    workers = args.workers or WORKERS
+    staleness = args.staleness or STALENESS
+    for n in workers:
+        for s in staleness:
+            if n == 1 and s > 0:
+                continue                     # 1 worker never waits: s is moot
+            cells.append(_async_cell(args, setup, n, s))
+            c = cells[-1]
+            print(f"workers={c['workers']} s={c['max_staleness']} "
+                  f"{c['updates_per_s']:7.1f} upd/s "
+                  f"final_psi={c['final_psi_bar']:.3f} "
+                  f"mean_tau={c['mean_tau']:.2f} max_tau={c['max_tau']}",
+                  flush=True)
+    sync = cells[0]
+    print(f"sync baseline {sync['updates_per_s']:7.1f} upd/s "
+          f"final_psi={sync['final_psi_bar']:.3f}")
+    return {
+        "config": {"model": "lenet-8x8", "batch": args.batch,
+                   "n_batches": args.n_batches, "steps": args.steps,
+                   "decay": args.decay, "devices": len(jax.devices())},
+        "cells": cells,
+        "note": ("worker threads share this host's cores, so updates/s "
+                 "measures engine/coordination overhead, not parallel "
+                 "speedup; the statistical columns (final_psi_bar, taus, "
+                 "accelerated) are the staleness study proper"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=192,
+                    help="total server pushes per cell")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-batches", type=int, default=8, dest="n_batches")
+    ap.add_argument("--decay", default="inverse")
+    ap.add_argument("--workers", type=int, nargs="*", default=None)
+    ap.add_argument("--staleness", type=int, nargs="*", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: reduced sweep (workers 1,2 × staleness 0,2)")
+    ap.add_argument("--out", default="BENCH_async_staleness.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.steps = min(args.steps, 64)
+        args.workers = args.workers or [1, 2]
+        args.staleness = args.staleness or [0, 2]
+
+    payload = {"mode": "smoke" if args.smoke else "full", "results": run(args)}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+    try:
+        from common import save_json
+        save_json("async_staleness", payload)
+    except Exception:
+        pass
+
+
+if __name__ == "__main__":
+    main()

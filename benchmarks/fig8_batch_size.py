@@ -46,6 +46,11 @@ def run():
             inconsistent=False,
             isgd_cfg=ISGDConfig(n_batches=sampler.n_batches),
             step_sync=True)   # Eq.21 fit needs true per-step wall deltas
+        if any(log.wall_est):
+            raise RuntimeError(
+                "refusing to fit Eq.21 on estimated walls: the log carries "
+                "dispatch-time/chunk-end estimates (step_sync=False or the "
+                "fused engine); rerun with per-step synced timing")
         wall = np.array(log.wall)
         psi = np.array(log.psi_bar)
         hit = np.where(psi <= target_loss)[0]

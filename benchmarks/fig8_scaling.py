@@ -7,17 +7,28 @@ test: per-step overhead C2 (sync + launch) is amortized by larger
 per-device batches, so the time-optimal batch grows with device count —
 "batch size is the key to scalability".
 
+``--engine async-ps`` reruns the same sweep on the asynchronous
+parameter-server engine (paper §6.2): N *worker threads* instead of N
+forced devices, ``--per-device-batch`` becomes the per-worker (= per
+update) batch, and the fitted C2 is the per-update server/coordination
+overhead rather than the sync+launch barrier — putting Eq.21's sync cost
+and the async staleness cost side by side on the same configs
+(``fig8_scaling_async-ps.json`` vs ``fig8_scaling.json``).
+
 Each (devices, batch) cell runs in a fresh child interpreter because
 ``--xla_force_host_platform_device_count`` (the flag that splits the host
 CPU into N XLA devices) must be set before jax initializes; the parent
-never imports jax.  Standalone worker invocation:
+never imports jax.  (async-ps cells need no device flag — workers are
+threads — but keep the same isolation.)  Standalone worker invocation:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m benchmarks.fig8_scaling --worker --per-device-batch 16
+  PYTHONPATH=src python -m benchmarks.fig8_scaling --worker \
+      --engine async-ps --workers 4 --per-device-batch 16
 
-NOTE: on this container every "device" shares the same host cores, so
-absolute samples/s does NOT scale with N — the run exercises the real
-multi-device code path and the C1/C2 fit shape, not real speedup.
+NOTE: on this container every "device"/worker shares the same host cores,
+so absolute samples/s does NOT scale with N — the run exercises the real
+engine code path and the C1/C2 fit shape, not real speedup.
 """
 from __future__ import annotations
 
@@ -48,6 +59,10 @@ def _worker(args) -> None:
 
     from repro.configs import CIFAR_QUICK
 
+    if args.engine == "async-ps":
+        _worker_async(args)
+        return
+
     n_dev = len(jax.devices())
     global_batch = args.per_device_batch * n_dev
     cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3,
@@ -77,72 +92,134 @@ def _worker(args) -> None:
           f"{global_batch/dt:.1f}", flush=True)
 
 
-def _spawn(devices: int, per_device_batch: int, steps: int):
+def _worker_async(args) -> None:
+    """One async-ps cell: N worker threads, per-worker batch b — the cost
+    per *update* is what Eq.21's t_iter becomes without the sync barrier."""
+    import time
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import CIFAR_QUICK
+    from repro.core import ISGDConfig
+    from repro.data import FCPRSampler, make_classification
+    from repro.distributed import AsyncPSCoordinator
+    from repro.models import cnn_loss_fn, init_cnn
+    from repro.optim import momentum
+
+    n = args.workers
+    b = args.per_device_batch
+    cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3,
+                              num_classes=10)
+    # same sample budget shape as the sync cell, rounded so every worker
+    # owns a whole FCPR shard
+    n_batches = max(4, -(-max(b * n * 4, 256) // b // n)) * n
+    data = make_classification(0, n_batches * b, 16, 3, 10, noise=0.6)
+    sampler = FCPRSampler(data, batch_size=b, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
+    coord = AsyncPSCoordinator(
+        lambda p, bb: cnn_loss_fn(p, cfg, bb), momentum(0.9), icfg,
+        workers=n, max_staleness=args.max_staleness,
+        lr_fn=lambda _: jnp.asarray(0.05))
+    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+    coord.warmup(params0, sampler)                  # compile off the clock
+    pushes = args.steps * n                         # N updates per "round"
+    t0 = time.perf_counter()
+    _, _, records = coord.run(params0, sampler, pushes)
+    dt = (time.perf_counter() - t0) / len(records)
+    print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f}", flush=True)
+
+
+def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
+           max_staleness: int):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                        f" --xla_force_host_platform_device_count={devices}"
-                        ).strip()
+    if engine == "sync":
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={devices}").strip()
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     root = os.path.join(os.path.dirname(__file__), "..")
     env["PYTHONPATH"] = os.pathsep.join(
         [src, root, env.get("PYTHONPATH", "")])
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.fig8_scaling", "--worker",
+         "--engine", engine, "--workers", str(devices),
+         "--max-staleness", str(max_staleness),
          "--per-device-batch", str(per_device_batch), "--steps", str(steps)],
         capture_output=True, text=True, env=env, cwd=root, timeout=1200)
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT "):
             _, n, b, ms, sps = line.split()
-            return {"devices": int(n), "per_device_batch": int(b),
-                    "ms_per_step": float(ms), "samples_per_s": float(sps)}
+            return {"engine": engine, "devices": int(n),
+                    "per_device_batch": int(b), "ms_per_step": float(ms),
+                    "samples_per_s": float(sps)}
     raise RuntimeError(
-        f"worker devices={devices} b={per_device_batch} failed:\n"
-        f"{proc.stdout}\n{proc.stderr}")
+        f"worker engine={engine} devices={devices} b={per_device_batch} "
+        f"failed:\n{proc.stdout}\n{proc.stderr}")
 
 
 def _fit_c1_c2(cells):
-    """Least-squares Eq.21 fit t_iter = B_global/C1 + C2 for one device
-    count; returns (C1 samples/s, C2 s)."""
+    """Least-squares Eq.21 fit t_iter = B/C1 + C2 for one device/worker
+    count; returns (C1 samples/s, C2 s).  B is the batch one update
+    consumes: the global batch for the sync engine, the per-worker batch
+    for async-ps (each push is one update)."""
     import numpy as np
-    bs = np.array([c["per_device_batch"] * c["devices"] for c in cells], float)
+    bs = np.array([c["per_device_batch"] *
+                   (c["devices"] if c["engine"] == "sync" else 1)
+                   for c in cells], float)
     ts = np.array([c["ms_per_step"] * 1e-3 for c in cells])
     A = np.stack([bs, np.ones_like(bs)], axis=1)
     (inv_c1, c2), *_ = np.linalg.lstsq(A, ts, rcond=None)
     return 1.0 / max(inv_c1, 1e-9), max(c2, 0.0)
 
 
-def run():
+def run(engine: str = "sync", max_staleness: int = 1):
     steps = scaled(8, lo=3)
     cells = []
     for n in DEVICE_COUNTS:
         for b in PER_DEVICE_BATCHES:
-            cells.append(_spawn(n, b, steps))
+            cells.append(_spawn(engine, n, b, steps, max_staleness))
     fits = {}
+    # sync keeps the historical "fig8_scaling_n{n}" emit/JSON names so the
+    # checked-in perf trajectory stays one continuous series
+    prefix = "fig8_scaling" if engine == "sync" else f"fig8_scaling_{engine}"
     for n in DEVICE_COUNTS:
         mine = [c for c in cells if c["devices"] == n]
         c1, c2 = _fit_c1_c2(mine)
         fits[n] = {"c1_samples_per_s": c1, "c2_s": c2}
         best = max(mine, key=lambda c: c["samples_per_s"])
-        emit(f"fig8_scaling_n{n}",
+        emit(f"{prefix}_n{n}",
              best["ms_per_step"] * 1e3,
              best_per_device_batch=best["per_device_batch"],
              best_samples_per_s=f"{best['samples_per_s']:.1f}",
              fitted_C1=f"{c1:.0f}", fitted_C2_ms=f"{c2*1e3:.2f}")
-    save_json("fig8_scaling", {"cells": cells, "fits": fits,
-                               "steps_per_cell": steps})
+    payload = {"engine": engine, "cells": cells, "fits": fits,
+               "steps_per_cell": steps}
+    if engine == "async-ps":
+        payload["max_staleness"] = max_staleness
+    save_json(prefix, payload)
     return cells
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--engine", default="sync", choices=["sync", "async-ps"],
+                    help="sync = shard_map data-parallel; async-ps = "
+                         "parameter-server worker threads")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker mode, async-ps: thread count (parent "
+                         "passes the device-count axis here)")
+    ap.add_argument("--max-staleness", type=int, default=1)
     ap.add_argument("--per-device-batch", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
     args = ap.parse_args()
     if args.worker:
         _worker(args)
     else:
-        run()
+        run(args.engine, args.max_staleness)
 
 
 if __name__ == "__main__":

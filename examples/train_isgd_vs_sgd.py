@@ -22,6 +22,13 @@ runs K full ISGD steps inside a ``lax.scan``, bit-exact with the per-step
 engine; ``--device-ring`` keeps the per-step engine but serves batches from
 the ring (one upload instead of one transfer per step).
 
+``--async-ps`` switches both legs to the asynchronous parameter-server
+engine (paper §6.2): ``--workers`` threads over per-worker FCPR shards push
+staleness-weighted deltas to a server running the SPC controller on
+globally consistent statistics; ``--max-staleness`` bounds worker drift
+(0 = lockstep; with 1 worker, bit-exact with the per-step engine) and
+``--staleness-decay`` picks w(τ).
+
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --steps 200
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --params 100 --steps 300
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --devices 8 --batch 16
@@ -103,6 +110,15 @@ def main():
     ap.add_argument("--device-ring", action="store_true",
                     help="feed the per-step engine from the device ring "
                          "(implied by --chunk-steps > 1)")
+    ap.add_argument("--async-ps", action="store_true",
+                    help="run both legs on the async parameter-server "
+                         "engine (repro.distributed.async_ps)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="async-ps: worker threads")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async-ps: SSP staleness bound (0 = lockstep)")
+    ap.add_argument("--staleness-decay", default="inverse",
+                    help="async-ps: w(tau) family[:alpha]")
     ap.add_argument("--ckpt", default="experiments/e2e_lm.npz")
     args = ap.parse_args()
 
@@ -135,7 +151,28 @@ def main():
         lr_fn = lambda _: jnp.asarray(args.lr)       # noqa: E731
         params = jax.tree.map(jnp.copy, params0)
         log = TrainLog()
-        if K > 1:
+        if args.async_ps:
+            from repro.distributed import (AsyncPSCoordinator,
+                                           records_to_trainlog,
+                                           staleness_reduce_from_spec)
+            if sampler.n_batches % args.workers:
+                raise SystemExit(
+                    f"n_batches={sampler.n_batches} must be a multiple of "
+                    f"--workers {args.workers} (per-worker FCPR shards)")
+            coord = AsyncPSCoordinator(
+                model.loss_fn, momentum(0.9), icfg, workers=args.workers,
+                max_staleness=args.max_staleness, lr_fn=lr_fn,
+                reduce_ctx=staleness_reduce_from_spec(args.staleness_decay),
+                inconsistent=inconsistent)
+            params, state, records = coord.run(params, sampler, args.steps)
+            args.steps = len(records)        # run() rounds up to whole rounds
+            log = records_to_trainlog(records)
+            taus = [r["tau"] for r in records]
+            print(f"[{name}] async-ps workers={args.workers} "
+                  f"max_staleness={args.max_staleness} "
+                  f"mean_tau={sum(taus)/len(taus):.2f} max_tau={max(taus)} "
+                  f"final loss={log.losses[-1]:.4f}")
+        elif K > 1:
             # fused engine: K steps per dispatch, metrics fetched per chunk
             if mesh is not None:
                 init_fn, chunk_fn = make_chunked_data_parallel_step(
@@ -153,33 +190,31 @@ def main():
                 log.extend(ms, time.perf_counter() - t0)
                 print(f"[{name}] step {(c+1)*K:4d} loss={log.losses[-1]:.4f} "
                       f"ψ̄={log.psi_bar[-1]:.4f} accel={log.accelerated[-1]}")
-            results[name] = log
-            if name == "isgd":
-                checkpoints.save(args.ckpt, params,
-                                 extra={"steps": args.steps, "arch": cfg.name})
-                print(f"checkpoint -> {args.ckpt}")
-            continue
-        if mesh is not None:
-            init_fn, step_fn = make_data_parallel_step(
-                model.loss_fn, momentum(0.9), icfg, mesh,
-                inconsistent=inconsistent, lr_fn=lr_fn)
-            feed = ring_or_prefetch(sampler, mesh=mesh) \
-                if args.device_ring else prefetched(sampler, mesh)
         else:
-            init_fn, step_fn = make_train_step(
-                model.loss_fn, momentum(0.9), icfg,
-                inconsistent=inconsistent, lr_fn=lr_fn)
-            feed = ring_or_prefetch(sampler) if args.device_ring else \
-                (lambda j: {k: jnp.asarray(v)        # noqa: E731
-                            for k, v in sampler(j).items()})
-        state = init_fn(params)
-        t0 = time.perf_counter()
-        for j in range(args.steps):
-            state, params, m = step_fn(state, params, feed(j))
-            log.append(jax.tree.map(np.asarray, m), time.perf_counter() - t0)
-            if (j + 1) % 20 == 0:
-                print(f"[{name}] step {j+1:4d} loss={log.losses[-1]:.4f} "
-                      f"ψ̄={log.psi_bar[-1]:.4f} accel={log.accelerated[-1]}")
+            if mesh is not None:
+                init_fn, step_fn = make_data_parallel_step(
+                    model.loss_fn, momentum(0.9), icfg, mesh,
+                    inconsistent=inconsistent, lr_fn=lr_fn)
+                feed = ring_or_prefetch(sampler, mesh=mesh) \
+                    if args.device_ring else prefetched(sampler, mesh)
+            else:
+                init_fn, step_fn = make_train_step(
+                    model.loss_fn, momentum(0.9), icfg,
+                    inconsistent=inconsistent, lr_fn=lr_fn)
+                feed = ring_or_prefetch(sampler) if args.device_ring else \
+                    (lambda j: {k: jnp.asarray(v)        # noqa: E731
+                                for k, v in sampler(j).items()})
+            state = init_fn(params)
+            t0 = time.perf_counter()
+            for j in range(args.steps):
+                state, params, m = step_fn(state, params, feed(j))
+                log.append(jax.tree.map(np.asarray, m),
+                           time.perf_counter() - t0)
+                if (j + 1) % 20 == 0:
+                    print(f"[{name}] step {j+1:4d} "
+                          f"loss={log.losses[-1]:.4f} "
+                          f"ψ̄={log.psi_bar[-1]:.4f} "
+                          f"accel={log.accelerated[-1]}")
         results[name] = log
         if name == "isgd":
             checkpoints.save(args.ckpt, params,

@@ -7,10 +7,12 @@ from repro.core.isgd import (
     isgd_step,
     solve_subproblem,
 )
-from repro.core.reduce import LOCAL, AxisReduce, LocalReduce, ReduceCtx
+from repro.core.reduce import (LOCAL, AxisReduce, LocalReduce, ReduceCtx,
+                               StalenessReduce, staleness_reduce_from_spec)
 
 __all__ = [
     "ISGDConfig", "ISGDState", "isgd_init", "isgd_step", "consistent_step",
     "solve_subproblem", "control", "schedule", "batch_model",
-    "ReduceCtx", "LocalReduce", "AxisReduce", "LOCAL",
+    "ReduceCtx", "LocalReduce", "AxisReduce", "StalenessReduce",
+    "staleness_reduce_from_spec", "LOCAL",
 ]

@@ -11,9 +11,16 @@ identical branch on every device.  ``isgd_step`` therefore takes a
     what the host-loop reproduction path uses);
   * ``AxisReduce(axis)`` — ``lax.pmean`` over a named mesh axis; only valid
     inside a ``shard_map``/``pmap`` scope that binds that axis (the
-    ``repro.distributed.data_parallel`` engine).
+    ``repro.distributed.data_parallel`` engine);
+  * ``StalenessReduce`` — the async parameter-server regime
+    (``repro.distributed.async_ps``, paper §6.2): loss/gradients stay
+    *local* during the step, so the accelerate ``cond`` and the subproblem
+    ``while_loop`` are per-worker-deterministic with no collectives inside
+    them; global consistency is instead recovered at the server, which owns
+    the canonical ψ queue and folds each worker's pushed delta in with the
+    staleness weight ``w(τ)`` this context defines (``weight``).
 
-Both are hashable frozen dataclasses so a jitted step specializes on the
+All are hashable frozen dataclasses so a jitted step specializes on the
 context without retracing per call.
 """
 from __future__ import annotations
@@ -84,6 +91,57 @@ class AxisReduce(ReduceCtx):
 
     def sum_scalar(self, x):
         return jax.lax.psum(x, self.axis)
+
+
+@dataclass(frozen=True)
+class StalenessReduce(ReduceCtx):
+    """Async parameter-server reduction (paper §6.2).
+
+    ``axis`` stays ``None``: during the step every ``loss_and_grad``
+    evaluation is the worker's own (``wrap_loss_and_grad`` is the identity),
+    so the subproblem ``while_loop`` trips on per-worker values and never
+    needs a collective — each worker is deterministic given its snapshot.
+    The ψ invariant is instead enforced *server-side*: the
+    :class:`~repro.distributed.async_ps.ParamServer` owns the canonical loss
+    queue (so limit/accelerate decisions use globally consistent statistics
+    even when workers race) and folds each pushed delta in with the
+    staleness weight ``w(τ)`` defined here, where τ is the number of server
+    versions applied between the worker's pull and its push.
+
+    Decay families (``w(0) == 1`` for all, which is what makes the
+    ``max_staleness=0`` single-worker engine reduce exactly to the
+    synchronous schedule):
+
+      * ``"inverse"`` — ``w(τ) = 1 / (1 + alpha·τ)`` (the default, the
+        classic staleness-aware async-SGD weighting);
+      * ``"exp"``     — ``w(τ) = exp(-alpha·τ)``;
+      * ``"none"``    — ``w(τ) = 1`` (pure Hogwild-style application).
+    """
+
+    decay: str = "inverse"
+    alpha: float = 1.0
+
+    def weight(self, tau):
+        """Staleness weight ``w(τ)`` — accepts python ints or jnp scalars."""
+        import jax.numpy as jnp
+
+        tau = jnp.asarray(tau, jnp.float32)
+        if self.decay == "inverse":
+            return 1.0 / (1.0 + self.alpha * tau)
+        if self.decay == "exp":
+            return jnp.exp(-self.alpha * tau)
+        if self.decay == "none":
+            return jnp.ones_like(tau)
+        raise ValueError(f"unknown staleness decay {self.decay!r}")
+
+
+def staleness_reduce_from_spec(spec: str) -> StalenessReduce:
+    """Parse a ``--staleness-decay`` CLI spec: ``"inverse"``, ``"exp:0.5"``,
+    ``"none"`` — ``family[:alpha]``."""
+    family, _, alpha = spec.partition(":")
+    ctx = StalenessReduce(decay=family, alpha=float(alpha) if alpha else 1.0)
+    ctx.weight(0)                      # validate the family eagerly
+    return ctx
 
 
 LOCAL = LocalReduce()

@@ -1,5 +1,8 @@
-"""Data-parallel ISGD (paper §6): shard_map engine, reduction contexts,
-host->device prefetching, and the N-device parity check.
+"""Distributed ISGD (paper §6): the synchronous shard_map data-parallel
+engine, reduction contexts, host->device prefetching, the N-device parity
+check — and the asynchronous parameter-server engine (§6.2) in
+``repro.distributed.async_ps`` (staleness-bounded workers, server-side SPC
+controller, ``w(τ)``-weighted delta folding).
 
 The reduction contexts themselves live in ``repro.core.reduce`` (so ``core``
 never imports this package); they are re-exported here because callers that
@@ -17,7 +20,13 @@ _EXPORTS = {
     "ReduceCtx": "repro.core.reduce",
     "LocalReduce": "repro.core.reduce",
     "AxisReduce": "repro.core.reduce",
+    "StalenessReduce": "repro.core.reduce",
+    "staleness_reduce_from_spec": "repro.core.reduce",
     "LOCAL": "repro.core.reduce",
+    "AsyncPSCoordinator": "repro.distributed.async_ps",
+    "ParamServer": "repro.distributed.async_ps",
+    "records_to_trainlog": "repro.distributed.async_ps",
+    "run_async_parity": "repro.distributed.async_ps",
     "make_data_parallel_step": "repro.distributed.data_parallel",
     "make_chunked_data_parallel_step": "repro.distributed.data_parallel",
     "batch_sharding": "repro.distributed.data_parallel",

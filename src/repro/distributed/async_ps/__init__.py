@@ -1,0 +1,71 @@
+"""Async parameter-server ISGD engine (paper §6.2) — staleness-bounded
+workers against a server-side SPC controller.
+
+The paper's second scaling mode runs ISGD on a heterogeneous system:
+workers compute gradients/ψ on their own batches and push to a parameter
+server asynchronously.  This package maps that onto a single jax host:
+
+  * :class:`~repro.distributed.async_ps.server.ParamServer` — canonical
+    ``(params, base-rule state)`` plus the ψ control queue.  The SPC
+    limit/accelerate logic runs **server-side** (``observe``), so
+    undertrained-batch detection uses globally consistent, globally ordered
+    loss statistics even when workers race; pushed deltas are folded in
+    staleness-weighted: ``new = old + w(τ)·(final − snapshot)``.
+  * :class:`~repro.distributed.async_ps.worker.Worker` /
+    ``make_worker_fns`` — the synchronous step body split at its two server
+    round-trips, reusing ``make_loss_and_grad``, the base ``rule.apply``
+    and ``solve_subproblem`` under a
+    :class:`~repro.core.reduce.StalenessReduce` context (loss/grads stay
+    local ⇒ the subproblem ``while_loop`` is per-worker-deterministic).
+  * :class:`~repro.distributed.async_ps.coordinator.AsyncPSCoordinator` —
+    N threads over per-worker FCPR shards behind a bounded-staleness
+    (SSP) gate.
+
+Staleness semantics (pinned by tests/test_async_ps.py):
+
+  * ``w(τ)`` is configurable via ``StalenessReduce``: ``1/(1+ατ)``
+    (default), ``exp(-ατ)``, or ``1`` — always ``w(0) = 1``;
+  * τ is the number of pushes applied between a worker's pull and its own
+    push; the gate bounds it by ``(2·max_staleness + 1)·(workers − 1)``
+    (each peer can push steps k−s…k+s while a worker sits at step k);
+  * ``max_staleness=0`` forces lockstep rounds — the synchronous schedule.
+    With one worker every τ is 0, pushes are exact replacements, and the
+    engine is **bit-exact** with the synchronous per-step engine (losses,
+    limits, accelerate decisions, final params), including under a
+    ψ̄-dependent loss-driven LR: workers read ψ̄ from the pulled queue
+    *before* their loss reaches the server — the same one-step lag the
+    per-step and fused engines carry (Alg.1 line 19).
+"""
+from __future__ import annotations
+
+import importlib
+
+# Lazy exports, like the parent package: ``python -m …async_ps.parity`` must
+# be runnable without this __init__ eagerly importing the submodule first.
+_EXPORTS = {
+    "StalenessReduce": "repro.core.reduce",
+    "staleness_reduce_from_spec": "repro.core.reduce",
+    "AsyncPSCoordinator": "repro.distributed.async_ps.coordinator",
+    "StalenessGate": "repro.distributed.async_ps.coordinator",
+    "ShardedFeed": "repro.distributed.async_ps.coordinator",
+    "records_to_trainlog": "repro.distributed.async_ps.coordinator",
+    "run_async_parity": "repro.distributed.async_ps.parity",
+    "ParamServer": "repro.distributed.async_ps.server",
+    "Snapshot": "repro.distributed.async_ps.server",
+    "Decision": "repro.distributed.async_ps.server",
+    "Worker": "repro.distributed.async_ps.worker",
+    "make_worker_fns": "repro.distributed.async_ps.worker",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(_EXPORTS)

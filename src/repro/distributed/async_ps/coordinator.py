@@ -1,0 +1,196 @@
+"""Coordinator: N worker threads over per-worker FCPR shards + SSP gate.
+
+Drives the async parameter-server engine on one host: the dataset's FCPR
+cycle is striped across workers (worker w's k-th batch is global batch
+``k·N + w``, so one async "round" covers the same batch set as N
+consecutive synchronous steps and the server's ψ window still means one
+epoch), worker threads run the split step from ``worker.py`` against the
+shared :class:`~repro.distributed.async_ps.server.ParamServer`, and the
+:class:`StalenessGate` bounds how far workers may drift apart.
+
+Staleness semantics (the contract the tests pin down):
+
+  * ``max_staleness`` bounds the SSP *step clock*: a worker may start local
+    step k only once every worker has finished step ``k − max_staleness``.
+    At ``max_staleness=0`` the rounds are lockstep — the synchronous
+    data-parallel schedule — and with a single worker the engine is
+    **bit-exact** with the synchronous per-step engine (the parity anchor:
+    every pull sees τ = 0, so pushes are exact replacements).
+  * The *version* staleness τ recorded per push (and fed to ``w(τ)``) is
+    the number of pushes that raced this worker between pull and push;
+    under the gate it is bounded by ``(2·max_staleness + 1)·(N − 1)``:
+    while a worker sits at step k, each of the N−1 peers can push steps
+    k−s through k+s (starting k+s+1 would need the sitter's clock to
+    advance), i.e. 2s+1 pushes apiece.  At s=0 this is the within-round
+    racing bound N−1.
+
+jax compiled computations release the GIL, so worker threads genuinely
+overlap device work even on one process; all host-side state transitions
+happen under the server lock or the gate condition variable.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import ISGDConfig
+from repro.core.reduce import StalenessReduce
+from repro.distributed.async_ps.server import ParamServer
+from repro.distributed.async_ps.worker import Worker, make_worker_fns
+from repro.optim.base import UpdateRule
+from repro.train.trainer import TrainLog
+
+
+class StalenessGate:
+    """SSP bounded-staleness gate over per-worker step counts."""
+
+    def __init__(self, n_workers: int, max_staleness: int):
+        assert n_workers >= 1 and max_staleness >= 0
+        self.max_staleness = max_staleness
+        self._done = [0] * n_workers
+        self._cv = threading.Condition()
+        self._error = None
+
+    def permits(self, k: int, min_done: int) -> bool:
+        """Pure predicate: may a worker start step k when the slowest worker
+        has completed ``min_done`` steps?"""
+        return min_done >= k - self.max_staleness
+
+    def start(self, wid: int, k: int) -> None:
+        with self._cv:
+            while self._error is None and not self.permits(k, min(self._done)):
+                self._cv.wait(timeout=120.0)
+            if self._error is not None:
+                raise RuntimeError(
+                    f"worker {wid} aborted: peer failed") from self._error
+
+    def finish(self, wid: int) -> None:
+        with self._cv:
+            self._done[wid] += 1
+            self._cv.notify_all()
+
+    def abort(self, err: BaseException) -> None:
+        with self._cv:
+            if self._error is None:
+                self._error = err
+            self._cv.notify_all()
+
+
+class ShardedFeed:
+    """Worker w's FCPR shard: local step k ⇒ global batch ``k·N + w``.
+
+    Striding (rather than contiguous blocks) keeps each async round aligned
+    with N consecutive synchronous steps of the same global cycle; with
+    N == 1 this is the unmodified global sampler, which is what the
+    bit-exact parity anchor relies on.
+    """
+
+    def __init__(self, sampler, wid: int, n_workers: int):
+        assert sampler.n_batches % n_workers == 0, (
+            f"n_batches={sampler.n_batches} must divide by "
+            f"workers={n_workers} so every worker owns a whole FCPR shard")
+        self.sampler = sampler
+        self.wid = wid
+        self.n_workers = n_workers
+        self.n_batches = sampler.n_batches // n_workers
+
+    def __call__(self, k: int) -> dict:
+        batch = self.sampler(k * self.n_workers + self.wid)
+        return {key: jnp.asarray(v) for key, v in batch.items()}
+
+
+class AsyncPSCoordinator:
+    """Builds the server + workers and runs the async engine end-to-end.
+
+    Mirrors the ``(init, run)`` ergonomics of the other engines: construct
+    with the model/rule/config, then ``run(params0, sampler, steps)`` →
+    ``(params, state, records)`` where ``state`` is a synchronous-layout
+    ``ISGDState`` and ``records`` is the per-push metrics list in server
+    apply order (each with ``worker``/``tau``/``version``/``wall``).
+    """
+
+    def __init__(self, loss_fn: Callable, rule: UpdateRule,
+                 isgd_cfg: ISGDConfig, *, workers: int = 1,
+                 max_staleness: int = 0, lr_fn: Callable,
+                 reduce_ctx: Optional[StalenessReduce] = None,
+                 inconsistent: bool = True, micro_batches: int = 1):
+        self.rule = rule
+        self.isgd_cfg = isgd_cfg
+        self.workers = workers
+        self.max_staleness = max_staleness
+        self.reduce_ctx = (reduce_ctx if reduce_ctx is not None
+                           else StalenessReduce())
+        self.inconsistent = inconsistent
+        self.fns = make_worker_fns(
+            loss_fn, rule, isgd_cfg, lr_fn=lr_fn, reduce_ctx=self.reduce_ctx,
+            micro_batches=micro_batches)
+
+    def warmup(self, params0, sampler) -> None:
+        """Compile every jit a timed run will hit — ``propose``, the
+        ``accelerate`` subproblem (which a short warm-up *run* can never
+        reach: the ψ queue needs a full epoch before the limit is finite),
+        and the server's observe/fold — so benchmarks measure execution,
+        not tracing."""
+        import jax
+
+        from repro.core import control
+
+        propose, accelerate = self.fns
+        batch = ShardedFeed(sampler, 0, 1)(0)
+        base = self.rule.init(params0)
+        queue = control.init_queue(self.isgd_cfg.n_batches)
+        p1, b1, loss, aux, lr = propose(params0, base, queue, batch)
+        out = accelerate(p1, batch, jnp.zeros((), jnp.float32), loss, lr)
+        srv = ParamServer(params0, base, self.isgd_cfg,
+                          reduce_ctx=self.reduce_ctx,
+                          inconsistent=self.inconsistent)
+        s1, s2 = srv.pull(), srv.pull()
+        srv.observe(loss)
+        srv.push(s1, p1, b1, worker=0, metrics={})      # τ=0 replacement
+        srv.push(s2, p1, b1, worker=0, metrics={})      # τ=1 ⇒ fold path
+        jax.block_until_ready((out[0], srv.params))
+
+    def run(self, params0, sampler, steps: int):
+        n = self.workers
+        if steps % n:
+            steps = -(-steps // n) * n        # whole rounds
+        server = ParamServer(params0, self.rule.init(params0), self.isgd_cfg,
+                             reduce_ctx=self.reduce_ctx,
+                             inconsistent=self.inconsistent)
+        gate = StalenessGate(n, self.max_staleness)
+        crew = [Worker(w, server, ShardedFeed(sampler, w, n), self.fns, gate,
+                       steps // n)
+                for w in range(n)]
+        if n == 1:
+            crew[0].run()                     # in-thread: easier to debug
+        else:
+            threads = [threading.Thread(target=w.run, name=f"async-ps-{w.wid}")
+                       for w in crew]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        errors = [w.error for w in crew if w.error is not None]
+        if errors:
+            # surface the root cause, not a bystander's gate-abort RuntimeError
+            def secondary(e):
+                return isinstance(e, RuntimeError) and "peer failed" in str(e)
+            raise next((e for e in errors if not secondary(e)), errors[0])
+        return server.params, server.isgd_state(), server.records
+
+
+def records_to_trainlog(records) -> TrainLog:
+    """Server push records → the host ``TrainLog`` schema.
+
+    Walls are real per-push host timestamps, but with more than one worker
+    the pushes *overlap*: consecutive-push deltas are ~cost/N, not the cost
+    of an update, so multi-worker walls are marked ``wall_est=True`` and
+    timing fits must refuse them (single-worker runs are sequential and
+    keep true walls)."""
+    overlapping = len({r["worker"] for r in records}) > 1
+    log = TrainLog()
+    for r in records:
+        log.append(r, r["wall"], wall_estimated=overlapping)
+    return log

@@ -1,0 +1,169 @@
+"""Parameter server: canonical ``(params, state)`` + server-side SPC.
+
+The server owns three things the async engine must keep globally
+consistent no matter how workers race (paper §6.2, ROADMAP "async
+parameter server" item):
+
+  1. **the canonical weights and base-rule state** — updated only under the
+     server lock, one version per applied push;
+  2. **the ψ control queue** — every worker loss is pushed into THIS queue
+     (``observe``), so the control limit ψ̄ + kσ and the accelerate decision
+     are computed from the same globally ordered statistics a synchronous
+     run would see, not from any worker's stale snapshot;
+  3. **the staleness weighting** — a push that raced ``τ`` other pushes is
+     folded in as ``new = old + w(τ)·(final − snapshot)`` with ``w`` from
+     the :class:`~repro.core.reduce.StalenessReduce` context.
+
+τ == 0 (no intervening push — always the case for the single-worker
+``max_staleness=0`` configuration) is applied as an exact replacement with
+the worker's final tree: mathematically identical to ``old + 1·delta``
+(``old`` *is* the snapshot when τ == 0) but free of the f32 round-trip
+``snap + (final − snap)``, which is what makes the async engine **bit-exact**
+with the synchronous per-step engine at the parity anchor.
+
+The two worker round-trips per step (``observe`` then ``push``) mirror the
+two places the synchronous ``isgd_step`` touches control state: the queue
+push + limit *before* the conservative subproblem, and the counter/param
+commit after it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ISGDConfig, ISGDState, control
+from repro.core.reduce import StalenessReduce
+
+
+# Module-level jits (shared cache): per-instance closures would re-trace for
+# every fresh server, putting compilation inside benchmark timed regions
+# even after a warm-up run.  k_sigma/w ride in as traced scalars so every
+# config/τ shares one compilation; the ops are the same the synchronous
+# step runs inside its jit, so bit-exactness is unaffected.
+@jax.jit
+def _observe_fn(queue, loss, k_sigma):
+    q2 = control.push(queue, loss)
+    return (q2, control.control_limit(q2, k_sigma),
+            control.mean(q2), control.std(q2))
+
+
+@jax.jit
+def _fold_fn(old, final, snap, w):
+    """Staleness-weighted fold for τ > 0: old + w(τ)·(final − snap)."""
+    return jax.tree.map(
+        lambda o, f, s: (o + w * (f - s)).astype(o.dtype), old, final, snap)
+
+
+class Snapshot(NamedTuple):
+    """What a worker pulls: possibly-stale canonical state + its version."""
+    params: object            # weight pytree
+    base: object              # base-rule state (e.g. momentum velocity)
+    queue: control.LossQueue  # ψ queue — drives the loss-driven LR (lagged)
+    version: int              # server version at pull time
+
+
+class Decision(NamedTuple):
+    """What ``observe`` returns: the server-side SPC verdict for one loss."""
+    limit: jnp.ndarray        # ψ̄ + kσ from the canonical post-push queue
+    psi_bar: jnp.ndarray
+    psi_std: jnp.ndarray
+    accelerated: bool         # loss > limit (False during warm-up / SGD mode)
+
+
+class ParamServer:
+    """Thread-safe canonical state holder with server-side SPC control."""
+
+    def __init__(self, params, base, isgd_cfg: ISGDConfig, *,
+                 reduce_ctx: Optional[StalenessReduce] = None,
+                 inconsistent: bool = True):
+        self._lock = threading.Lock()
+        self._params = params
+        self._base = base
+        self._queue = control.init_queue(isgd_cfg.n_batches)
+        self._cfg = isgd_cfg
+        self._ctx = reduce_ctx if reduce_ctx is not None else StalenessReduce()
+        self._inconsistent = inconsistent
+        self._version = 0
+        self._iter = 0
+        self._accel_count = 0
+        self._sub_iters = 0
+        self._k_sigma = jnp.asarray(isgd_cfg.k_sigma, jnp.float32)
+        self._t0 = time.perf_counter()
+        self.records: List[dict] = []
+
+    # -- worker protocol ----------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def pull(self) -> Snapshot:
+        """Current canonical state (jax arrays are immutable, so handing out
+        references under the lock is race-free)."""
+        with self._lock:
+            return Snapshot(self._params, self._base, self._queue,
+                            self._version)
+
+    def observe(self, loss) -> Decision:
+        """Push one batch loss into the canonical ψ queue and return the
+        SPC verdict computed from the *post-push* queue — exactly the
+        ordering of Alg.1 lines 13–22 in the synchronous step, but on
+        globally consistent statistics."""
+        with self._lock:
+            q2, limit, psi_bar, psi_std = _observe_fn(self._queue, loss,
+                                                      self._k_sigma)
+            self._queue = q2
+        # host-level compare of exact f32 values — identical verdict to the
+        # synchronous step's traced ``loss > limit`` (warm-up ⇒ limit=inf)
+        accelerated = self._inconsistent and float(loss) > float(limit)
+        return Decision(limit, psi_bar, psi_std, accelerated)
+
+    def push(self, snap: Snapshot, final_params, final_base, *,
+             worker: int, metrics: dict) -> int:
+        """Fold a worker's finished step into the canonical state.
+
+        Returns the staleness τ = versions applied between the worker's pull
+        and this push.  τ == 0 applies the worker's trees verbatim (exact —
+        see module docstring); τ > 0 applies ``old + w(τ)·(final − snap)``
+        to params and base state alike.
+        """
+        with self._lock:
+            tau = self._version - snap.version
+            assert tau >= 0, (tau, self._version, snap.version)
+            if tau == 0:
+                self._params = final_params
+                self._base = final_base
+            else:
+                w = self._ctx.weight(tau)
+                self._params = _fold_fn(self._params, final_params,
+                                        snap.params, w)
+                self._base = _fold_fn(self._base, final_base, snap.base, w)
+            self._version += 1
+            self._iter += 1
+            self._accel_count += int(metrics.get("accelerated", False))
+            self._sub_iters += int(metrics.get("sub_iters", 0))
+            self.records.append(dict(
+                metrics, worker=worker, tau=tau, version=self._version,
+                wall=time.perf_counter() - self._t0))
+            return tau
+
+    # -- results ------------------------------------------------------------
+    @property
+    def params(self):
+        with self._lock:
+            return self._params
+
+    def isgd_state(self) -> ISGDState:
+        """Canonical state in the synchronous engine's ``ISGDState`` layout
+        (counters as i32 scalars), so callers compare/checkpoint uniformly."""
+        with self._lock:
+            return ISGDState(
+                base=self._base,
+                queue=self._queue,
+                iter=jnp.asarray(self._iter, jnp.int32),
+                accel_count=jnp.asarray(self._accel_count, jnp.int32),
+                sub_iters=jnp.asarray(self._sub_iters, jnp.int32),
+            )

@@ -1,0 +1,117 @@
+"""Worker: the synchronous step body, split at its two server round-trips.
+
+``make_worker_fns`` compiles the SAME primitives ``core.isgd.isgd_step``
+composes — ``make_loss_and_grad``, the base ``rule.apply``, Alg.2's
+``solve_subproblem`` — into two jitted pieces:
+
+  * ``propose(params, base, queue, batch)`` — loss/gradients on the pulled
+    (possibly stale) snapshot plus the vanilla base update (Alg.1 line 21).
+    The loss-driven LR is read from the snapshot queue *before* this step's
+    loss reaches the server, preserving the one-step lag the per-step and
+    fused engines guarantee (ROADMAP design rule / Alg.1 line 19);
+  * ``accelerate(params1, batch, limit, loss, lr)`` — the conservative
+    subproblem (Eq. 17) from the post-update weights, driven by the
+    *server's* control limit.
+
+The split is exactly where the synchronous step's control state lives: the
+queue push + limit (``ParamServer.observe``) and the commit
+(``ParamServer.push``).  Everything between is per-worker-deterministic —
+the :class:`~repro.core.reduce.StalenessReduce` context wraps every
+``loss_and_grad`` as the identity, so the subproblem ``while_loop`` trips on
+the worker's own values with no collectives inside it.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core import ISGDConfig, control, solve_subproblem
+from repro.core.reduce import ReduceCtx, StalenessReduce
+from repro.optim.base import UpdateRule
+from repro.train.trainer import make_loss_and_grad
+
+
+def make_worker_fns(loss_fn: Callable, rule: UpdateRule,
+                    isgd_cfg: ISGDConfig, *, lr_fn: Callable,
+                    reduce_ctx: ReduceCtx = StalenessReduce(),
+                    micro_batches: int = 1):
+    """Returns the jitted ``(propose, accelerate)`` pair shared by every
+    worker thread (the jit cache is thread-safe and the computation is
+    identical across workers)."""
+    lg = reduce_ctx.wrap_loss_and_grad(
+        make_loss_and_grad(loss_fn, micro_batches))
+
+    @jax.jit
+    def propose(params, base, queue, batch):
+        lr = lr_fn(control.mean(queue))      # pre-push queue: one-step lag
+        (loss, aux), grads = lg(params, batch)
+        base1, params1 = rule.apply(base, params, grads, lr)
+        return params1, base1, loss, aux, lr
+
+    @jax.jit
+    def accelerate(params1, batch, limit, loss, lr):
+        def lg1(w):
+            (l, _), g = lg(w, batch)
+            return l, g
+        return solve_subproblem(lg1, params1, limit, loss, lr, isgd_cfg)
+
+    return propose, accelerate
+
+
+class Worker:
+    """One worker thread's loop over its FCPR shard.
+
+    Per local step k: wait at the bounded-staleness gate, pull a snapshot,
+    ``propose``, ``observe`` (server-side SPC verdict), optionally solve the
+    subproblem against the server's limit, ``push``.  Exceptions abort the
+    gate so sibling workers unblock instead of deadlocking.
+    """
+
+    def __init__(self, wid: int, server, feed: Callable, fns, gate,
+                 steps: int):
+        self.wid = wid
+        self.server = server
+        self.feed = feed                      # k -> device batch dict
+        self.propose, self.accelerate = fns
+        self.gate = gate
+        self.steps = steps
+        self.error = None
+
+    def run(self) -> None:
+        try:
+            for k in range(self.steps):
+                self.gate.start(self.wid, k)
+                self._step(k)
+                self.gate.finish(self.wid)
+        except BaseException as e:            # noqa: BLE001 — must unblock peers
+            self.error = e
+            self.gate.abort(e)
+
+    def _step(self, k: int) -> None:
+        batch = self.feed(k)
+        snap = self.server.pull()
+        params1, base1, loss, aux, lr = self.propose(
+            snap.params, snap.base, snap.queue, batch)
+        d = self.server.observe(loss)
+        if d.accelerated:
+            params2, used = self.accelerate(params1, batch, d.limit, loss, lr)
+            used = int(used)
+        else:
+            params2, used = params1, 0
+        try:
+            aux_val = float(aux)              # scalar aux by repo convention
+        except (TypeError, ValueError):
+            aux_val = None
+        self.server.push(
+            snap, params2, base1, worker=self.wid,
+            metrics={
+                "loss": float(loss),
+                "aux": aux_val,
+                "psi_bar": float(d.psi_bar),
+                "psi_std": float(d.psi_std),
+                "limit": float(d.limit),
+                "accelerated": bool(d.accelerated),
+                "sub_iters": used,
+                "lr": float(lr),
+            })

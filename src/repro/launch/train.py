@@ -5,17 +5,24 @@ mesh; on this CPU container it runs reduced configs under a host mesh so the
 whole path (sharded params, pjit'd ISGD step with its cond/while_loop,
 loss-driven LR) is exercised end-to-end.
 
-Two engines:
+Three engines (``--engine``; ``--data-parallel`` remains as an alias):
 
-  * default — pjit/GSPMD over a (data, model) mesh: tensor/FSDP parallel
-    weights, activation-sharding constraints (launch/shardings.py);
-  * ``--data-parallel`` — the shard_map engine (repro.distributed): params
+  * ``pjit`` (default) — pjit/GSPMD over a (data, model) mesh: tensor/FSDP
+    parallel weights, activation-sharding constraints (launch/shardings.py);
+  * ``data-parallel`` — the shard_map engine (repro.distributed): params
     and ISGD state replicated, batch sharded over 'data', gradients and the
     control statistic ψ explicitly all-reduced so every device takes the
     same accelerate branch (paper §6); input batches ride the
-    double-buffered host->device prefetcher.
+    double-buffered host->device prefetcher;
+  * ``async-ps`` — the asynchronous parameter-server engine (paper §6.2,
+    repro.distributed.async_ps): ``--workers`` threads over per-worker FCPR
+    shards push staleness-weighted deltas (``--staleness-decay``, w(τ)) to
+    a server that runs the SPC limit/accelerate logic on globally
+    consistent statistics; ``--max-staleness`` bounds how far workers may
+    drift apart (0 = lockstep rounds — the synchronous schedule).
 
-Two input/dispatch accelerators compose with both engines:
+Two input/dispatch accelerators compose with the pjit and data-parallel
+engines (async-ps is host-orchestrated per worker step and rejects them):
 
   * ``--device-ring`` — serve batches from the device-resident FCPR ring
     (one epoch upload, batches by dynamic_slice) instead of per-step host
@@ -147,6 +154,49 @@ def run_data_parallel(args, cfg, model, sampler, rule, icfg, lr_fn):
     return state, time.perf_counter() - t0
 
 
+def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
+    from repro.distributed import AsyncPSCoordinator, staleness_reduce_from_spec
+
+    if cfg.family in ("vlm", "encdec"):
+        raise SystemExit("--engine async-ps supports decoder-only/cnn "
+                         "configs (no constant frontend-embed plumbing)")
+    if args.chunk_steps > 1 or args.device_ring:
+        raise SystemExit("--chunk-steps/--device-ring do not compose with "
+                         "--engine async-ps (workers dispatch per step from "
+                         "host snapshots, there is no fused scan or device "
+                         "ring in this engine)")
+    if sampler.n_batches % args.workers:
+        raise SystemExit(f"n_batches={sampler.n_batches} must be a multiple "
+                         f"of --workers {args.workers} (per-worker FCPR "
+                         f"shards)")
+    rctx = staleness_reduce_from_spec(args.staleness_decay)
+    print(f"arch={cfg.name} engine=async-ps workers={args.workers} "
+          f"max_staleness={args.max_staleness} w(tau)={args.staleness_decay}")
+
+    params = model.init(jax.random.PRNGKey(0), max_seq=args.seq)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M (canonical copy on the server)")
+
+    coord = AsyncPSCoordinator(
+        model.loss_fn, rule, icfg, workers=args.workers,
+        max_staleness=args.max_staleness, lr_fn=lr_fn, reduce_ctx=rctx,
+        inconsistent=not args.consistent)
+    t0 = time.perf_counter()
+    params, state, records = coord.run(params, sampler, args.steps)
+    dt = time.perf_counter() - t0
+    args.steps = len(records)
+    for i, r in enumerate(records):
+        if (i + 1) % 5 == 0 or i == 0:
+            print(f"push {i+1:4d} w{r['worker']} tau={r['tau']} "
+                  f"loss={r['loss']:.4f} psi_bar={r['psi_bar']:.4f} "
+                  f"limit={r['limit']:.4f} accel={r['accelerated']}")
+    taus = [r["tau"] for r in records]
+    print(f"staleness: mean_tau={sum(taus)/len(taus):.2f} "
+          f"max_tau={max(taus)} "
+          f"bound={(2 * args.max_staleness + 1) * (args.workers - 1)}")
+    return state, dt
+
+
 def run_pjit(args, cfg, model, sampler, rule, icfg, lr_fn):
     mesh = make_host_mesh(model=args.model_parallel)
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={mesh.size}")
@@ -213,9 +263,21 @@ def main():
     ap.add_argument("--stop", type=int, default=3)
     ap.add_argument("--n-seqs", type=int, default=64)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--engine", default=None,
+                    choices=["pjit", "data-parallel", "async-ps"],
+                    help="training engine (default pjit; see module "
+                         "docstring)")
     ap.add_argument("--data-parallel", action="store_true",
-                    help="use the shard_map data-parallel ISGD engine with "
-                         "prefetched inputs (replicated params)")
+                    help="alias for --engine data-parallel")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="async-ps: number of worker threads")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async-ps: SSP bound — a worker may start step k "
+                         "only when every worker finished step k-N; 0 = "
+                         "lockstep (synchronous schedule)")
+    ap.add_argument("--staleness-decay", default="inverse",
+                    help="async-ps: w(tau) family[:alpha] — inverse "
+                         "(1/(1+a*tau)), exp (e^-a*tau), none")
     ap.add_argument("--chunk-steps", type=int, default=1,
                     help="K>1 = fused engine: K ISGD steps per dispatch via "
                          "lax.scan over the device-resident FCPR ring "
@@ -239,7 +301,9 @@ def main():
                       stop=args.stop)
     lr_fn = constant_lr(args.lr)
 
-    runner = run_data_parallel if args.data_parallel else run_pjit
+    engine = args.engine or ("data-parallel" if args.data_parallel else "pjit")
+    runner = {"pjit": run_pjit, "data-parallel": run_data_parallel,
+              "async-ps": run_async_ps}[engine]
     state, dt = runner(args, cfg, model, sampler, rule, icfg, lr_fn)
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({dt/args.steps*1e3:.0f} ms/step) "

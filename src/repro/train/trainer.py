@@ -120,6 +120,17 @@ def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
 
 @dataclass
 class TrainLog:
+    """Per-step training record.
+
+    ``wall[i]`` is a cumulative host timestamp (seconds since the run's
+    t0); its consecutive deltas are true per-step durations only when
+    ``wall_est[i]`` is False.  Entries marked True are *estimates* — the
+    chunk-end time of a fused dispatch (``extend``), the dispatch time of
+    an un-synced step (``train(step_sync=False)``), or overlapping
+    async-worker pushes — and must not feed timing fits
+    (``benchmarks/fig8_batch_size.py`` refuses them).
+    """
+
     losses: list = field(default_factory=list)
     limits: list = field(default_factory=list)
     psi_bar: list = field(default_factory=list)
@@ -127,8 +138,10 @@ class TrainLog:
     accelerated: list = field(default_factory=list)
     sub_iters: list = field(default_factory=list)
     wall: list = field(default_factory=list)
+    wall_est: list = field(default_factory=list)   # True = estimated wall
 
-    def append(self, metrics: Dict[str, Any], wall: float):
+    def append(self, metrics: Dict[str, Any], wall: float, *,
+               wall_estimated: bool = False):
         self.losses.append(float(metrics["loss"]))
         self.limits.append(float(metrics["limit"]))
         self.psi_bar.append(float(metrics["psi_bar"]))
@@ -136,18 +149,21 @@ class TrainLog:
         self.accelerated.append(bool(metrics["accelerated"]))
         self.sub_iters.append(int(metrics["sub_iters"]))
         self.wall.append(wall)
+        self.wall_est.append(bool(wall_estimated))
 
     def extend(self, stacked: Dict[str, Any], wall: float):
         """Ingest one chunk of the fused engine: ``stacked`` holds (K,)
         leading-dim metric arrays from the on-device ``lax.scan``, fetched in
         ONE host transfer here (the only sync per chunk).  All K steps get
         the chunk-end ``wall`` — the host has no per-step timestamps inside
-        a fused dispatch, and pretending otherwise would fabricate data."""
+        a fused dispatch, and pretending otherwise would fabricate data — so
+        every entry is marked ``wall_est=True``."""
         import numpy as np
         host = {k: np.asarray(v) for k, v in stacked.items()
                 if k != "aux"}
         for i in range(len(host["loss"])):
-            self.append({k: v[i] for k, v in host.items()}, wall)
+            self.append({k: v[i] for k, v in host.items()}, wall,
+                        wall_estimated=True)
 
 
 def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
@@ -181,7 +197,9 @@ def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
 
     def flush():
         for m, w in pending:
-            log.append(m, w)                  # float() here is the sync
+            # un-synced walls are dispatch times, not completion times —
+            # record them as estimates so timing fits can refuse them
+            log.append(m, w, wall_estimated=not step_sync)
         pending.clear()
 
     for j in range(steps):

@@ -1,0 +1,272 @@
+"""Async parameter-server ISGD engine (ISSUE 3 acceptance).
+
+Pinned invariants:
+
+  * **bit-exact parity anchor** — with 1 worker and ``max_staleness=0`` the
+    async engine reproduces the synchronous per-step engine EXACTLY
+    (losses, control limits, accelerate decisions, sub-iteration counts,
+    ψ̄/σ, final params, final counters) over 8 FCPR epochs, driven by a
+    ψ̄-dependent ``lr_fn`` so the one-step queue lag is on the tested path;
+  * **staleness semantics** — ``w(0) = 1`` for every decay family; the SSP
+    gate at ``max_staleness=0`` forces lockstep rounds (the synchronous
+    schedule) and version staleness τ never exceeds ``(2s+1)·(N−1)``; a
+    τ > 0 push is folded in as ``old + w(τ)·(final − snapshot)``;
+  * **convergence** — 2 stale workers reach the synchronous engine's final
+    loss (within slack) on the lenet-8x8 config.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ISGDConfig
+from repro.core.reduce import StalenessReduce, staleness_reduce_from_spec
+from repro.data import FCPRSampler, make_classification
+from repro.distributed.async_ps import (AsyncPSCoordinator, ParamServer,
+                                        ShardedFeed, StalenessGate,
+                                        records_to_trainlog,
+                                        run_async_parity)
+from repro.optim import momentum
+from repro.train import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# acceptance anchor: bit-exact with the synchronous per-step engine
+# ---------------------------------------------------------------------------
+def test_async_1worker_staleness0_bit_exact_with_sync():
+    """steps=32 over n_batches=4 ⇒ 8 FCPR epochs (≥ 4 required), ψ̄-driven
+    LR, subproblem firing — and zero deviation anywhere."""
+    r = run_async_parity(steps=32, workers=1, max_staleness=0)
+    assert r["mode"] == "bitexact"
+    assert r["ok"], r
+    assert r["accelerations"] > 0, "subproblem never fired; cond path untested"
+    assert r["metric_mismatches"] == 0 and r["max_param_dev"] == 0.0
+    assert r["max_tau"] == 0
+
+
+def test_async_multiworker_lockstep_and_convergence_smoke():
+    """max_staleness=0 with racing workers: still lockstep rounds, τ ≤ N−1,
+    and the final loss tracks the synchronous run on the rigged problem."""
+    r = run_async_parity(steps=64, workers=2, max_staleness=0, tol=0.3)
+    assert r["mode"] == "convergence"
+    assert r["ok"], r
+    assert r["max_tau"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# staleness weights + server fold
+# ---------------------------------------------------------------------------
+def test_staleness_weight_families():
+    inv = StalenessReduce(decay="inverse", alpha=1.0)
+    assert float(inv.weight(0)) == 1.0
+    np.testing.assert_allclose(float(inv.weight(1)), 0.5)
+    np.testing.assert_allclose(float(inv.weight(3)), 0.25)
+    exp = StalenessReduce(decay="exp", alpha=0.5)
+    assert float(exp.weight(0)) == 1.0
+    np.testing.assert_allclose(float(exp.weight(2)), np.exp(-1.0), rtol=1e-6)
+    none = StalenessReduce(decay="none")
+    assert float(none.weight(7)) == 1.0
+    with pytest.raises(ValueError):
+        StalenessReduce(decay="bogus").weight(1)
+
+
+def test_staleness_reduce_spec_parser():
+    assert staleness_reduce_from_spec("inverse") == StalenessReduce()
+    assert staleness_reduce_from_spec("exp:0.5") == StalenessReduce(
+        decay="exp", alpha=0.5)
+    assert staleness_reduce_from_spec("none") == StalenessReduce(decay="none")
+    with pytest.raises(ValueError):
+        staleness_reduce_from_spec("bogus")
+
+
+def test_server_observe_runs_spc_on_canonical_queue():
+    """Two racing workers' losses land in ONE queue: the second observe sees
+    statistics that include the first worker's loss — the globally
+    consistent undertrained-batch detection the subsystem exists for."""
+    icfg = ISGDConfig(n_batches=2, k_sigma=0.5)
+    srv = ParamServer({"w": jnp.zeros(2)}, (), icfg)
+    d1 = srv.observe(jnp.asarray(1.0, jnp.float32))
+    assert not d1.accelerated                      # warm-up: limit = +inf
+    assert float(d1.limit) == float("inf")
+    d2 = srv.observe(jnp.asarray(2.0, jnp.float32))    # queue now full
+    np.testing.assert_allclose(float(d2.psi_bar), 1.5)
+    assert np.isfinite(float(d2.limit))
+    # an outlier against the now-full queue must trip the limit
+    d3 = srv.observe(jnp.asarray(50.0, jnp.float32))
+    assert d3.accelerated
+
+
+def test_server_staleness_weighted_fold():
+    icfg = ISGDConfig(n_batches=4, k_sigma=1.0)
+    p0 = {"w": jnp.asarray([1.0, 2.0], jnp.float32)}
+    srv = ParamServer(p0, (), icfg,
+                      reduce_ctx=StalenessReduce(decay="inverse", alpha=1.0))
+    snap_a = srv.pull()
+    snap_b = srv.pull()
+    fin_a = {"w": jnp.asarray([2.0, 2.0], jnp.float32)}
+    tau_a = srv.push(snap_a, fin_a, (), worker=0, metrics={"loss": 0.0})
+    assert tau_a == 0
+    np.testing.assert_array_equal(np.asarray(srv.params["w"]), [2.0, 2.0])
+    # B pushed one version late: old + w(1)·(final − snapshot), w(1) = 1/2
+    fin_b = {"w": jnp.asarray([5.0, 0.0], jnp.float32)}
+    tau_b = srv.push(snap_b, fin_b, (), worker=1, metrics={"loss": 0.0})
+    assert tau_b == 1
+    np.testing.assert_allclose(np.asarray(srv.params["w"]),
+                               [2.0 + 0.5 * (5.0 - 1.0),
+                                2.0 + 0.5 * (0.0 - 2.0)])
+    assert int(srv.isgd_state().iter) == 2
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness gate
+# ---------------------------------------------------------------------------
+def test_gate_permits_predicate():
+    g0 = StalenessGate(2, max_staleness=0)
+    assert g0.permits(0, 0) and not g0.permits(1, 0) and g0.permits(1, 1)
+    g3 = StalenessGate(2, max_staleness=3)
+    assert g3.permits(3, 0) and not g3.permits(4, 0) and g3.permits(4, 1)
+
+
+def test_gate_blocks_leader_until_straggler_finishes():
+    gate = StalenessGate(2, max_staleness=0)
+    order = []
+
+    def leader():
+        gate.start(0, 0)
+        gate.finish(0)
+        gate.start(0, 1)           # must block until worker 1 finishes step 0
+        order.append("leader@1")
+        gate.finish(0)
+
+    t = threading.Thread(target=leader)
+    t.start()
+    time.sleep(0.1)
+    assert order == []             # still parked at the gate
+    gate.start(1, 0)
+    order.append("straggler@0")
+    gate.finish(1)
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert order == ["straggler@0", "leader@1"]
+
+
+def test_gate_abort_unblocks_waiters():
+    gate = StalenessGate(2, max_staleness=0)
+    err = []
+
+    def blocked():
+        try:
+            gate.start(0, 1)       # can never proceed: peer is at step 0
+        except RuntimeError as e:
+            err.append(e)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    time.sleep(0.05)
+    gate.abort(ValueError("peer died"))
+    t.join(timeout=10)
+    assert not t.is_alive() and len(err) == 1
+
+
+def test_lockstep_rounds_at_staleness_zero():
+    """With max_staleness=0, every worker pushes round r before any worker
+    pushes round r+1 — the synchronous data-parallel schedule."""
+    rng = np.random.RandomState(0)
+    xs = rng.randn(24, 4).astype(np.float32)
+    ys = xs.sum(axis=1).astype(np.float32)
+
+    def loss_fn(params, batch):
+        loss = jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+        return loss, loss
+
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=4, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.0, stop=2,
+                      zeta=0.01)
+    coord = AsyncPSCoordinator(loss_fn, momentum(0.9), icfg, workers=3,
+                               max_staleness=0,
+                               lr_fn=lambda _: jnp.asarray(0.01))
+    _, _, records = coord.run({"w": jnp.zeros(4, jnp.float32)}, sampler, 24)
+    counts = [0, 0, 0]
+    for r in records:
+        counts[r["worker"]] += 1
+        # at any prefix no worker is a whole round ahead of another
+        assert max(counts) - min(counts) <= 1, counts
+        assert r["tau"] <= 2       # within-round racing only (≤ N−1)
+    assert counts == [8, 8, 8]
+
+
+# ---------------------------------------------------------------------------
+# per-worker FCPR shards
+# ---------------------------------------------------------------------------
+def test_sharded_feed_strides_global_cycle():
+    rng = np.random.RandomState(0)
+    data = {"x": rng.randn(48, 3).astype(np.float32)}
+    sampler = FCPRSampler(data, batch_size=4, seed=1)     # 12 batches
+    feeds = [ShardedFeed(sampler, w, 3) for w in range(3)]
+    assert all(f.n_batches == 4 for f in feeds)
+    for k in range(8):                                    # wraps the shard
+        for w, f in enumerate(feeds):
+            np.testing.assert_array_equal(
+                np.asarray(f(k)["x"]), sampler(k * 3 + w)["x"])
+    with pytest.raises(AssertionError):
+        ShardedFeed(sampler, 0, 5)                        # 12 % 5 != 0
+
+
+def test_records_to_trainlog_wall_semantics():
+    rec = {"loss": 1.0, "limit": float("inf"), "psi_bar": 1.0, "psi_std": 0.0,
+           "accelerated": False, "sub_iters": 0, "wall": 0.25}
+    one = records_to_trainlog([dict(rec, worker=0), dict(rec, worker=0)])
+    assert one.wall == [0.25, 0.25]
+    assert one.wall_est == [False, False]   # sequential pushes: true walls
+    # overlapping workers: push deltas are ~cost/N, not per-update cost
+    two = records_to_trainlog([dict(rec, worker=0), dict(rec, worker=1)])
+    assert two.wall_est == [True, True]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: multi-worker convergence on the lenet-8x8 config
+# ---------------------------------------------------------------------------
+def test_async_multiworker_convergence_lenet8x8():
+    from repro.configs.paper_cnns import CNNConfig, ConvSpec
+    from repro.models import cnn_loss_fn, init_cnn
+
+    cfg = CNNConfig(name="lenet-8x8", image_size=8, channels=1,
+                    num_classes=10,
+                    convs=(ConvSpec(4, 3, pool=2), ConvSpec(8, 3, pool=2)),
+                    hidden=(24,))
+    data = make_classification(0, 64, 8, 1, 10, noise=0.2, class_spread=3.0)
+    sampler = FCPRSampler(data, batch_size=8, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.5, stop=3,
+                      zeta=0.02)
+    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)
+    lr_fn = lambda _: jnp.asarray(0.03)
+    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+    steps = 320                                   # 40 epochs: both plateau
+
+    init_fn, step = make_train_step(loss_fn, momentum(0.9), icfg,
+                                    lr_fn=lr_fn, donate=False)
+    p = jax.tree.map(jnp.copy, params0)
+    s = init_fn(p)
+    psis = []
+    for j in range(steps):
+        s, p, m = step(s, p, {k: jnp.asarray(v)
+                              for k, v in sampler(j).items()})
+        psis.append(m["psi_bar"])
+    sync_final = float(np.mean([float(x) for x in psis[-16:]]))
+
+    coord = AsyncPSCoordinator(loss_fn, momentum(0.9), icfg, workers=2,
+                               max_staleness=1, lr_fn=lr_fn)
+    _, state, records = coord.run(params0, sampler, steps)
+    async_final = float(np.mean([r["psi_bar"] for r in records[-16:]]))
+
+    # one-sided with slack: async must reach the sync engine's final loss
+    # (observed gap ≲ 1e-3; 0.1 absorbs thread-schedule nondeterminism)
+    assert async_final <= sync_final + 0.1, (async_final, sync_final)
+    assert sync_final < 0.1 and async_final < 0.2, "neither run converged"
+    assert int(state.accel_count) > 0
+    taus = [r["tau"] for r in records]
+    assert max(taus) <= (2 * 1 + 1) * (2 - 1)    # (2s+1)·(N−1), s=1 N=2
+    assert sorted({r["worker"] for r in records}) == [0, 1]

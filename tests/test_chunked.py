@@ -276,3 +276,6 @@ def test_trainlog_extend_matches_append():
     assert got.accelerated == ref.accelerated
     assert got.sub_iters == ref.sub_iters
     assert got.wall == [0.5] * 8
+    # chunk-end walls are estimates; per-step appends default to real walls
+    assert got.wall_est == [True] * 8
+    assert ref.wall_est == [False] * 8

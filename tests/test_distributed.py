@@ -58,6 +58,67 @@ def test_axis_reduce_means_over_mesh_axis():
     assert hash(AxisReduce("data")) == hash(rctx)
 
 
+def test_reduce_ctx_hashable_and_jit_specializes_without_retrace():
+    """Every ReduceCtx flavor is a hashable static jit argument: equal
+    contexts hit the jit cache (no retrace), distinct ones retrace once."""
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.reduce import StalenessReduce
+
+    from repro.core.reduce import LocalReduce as _LR
+    assert hash(LOCAL) == hash(_LR())
+    assert hash(AxisReduce("data")) == hash(AxisReduce("data"))
+    assert hash(StalenessReduce()) == hash(StalenessReduce())
+    assert hash(StalenessReduce(decay="exp", alpha=0.5)) == \
+        hash(StalenessReduce(decay="exp", alpha=0.5))
+    assert StalenessReduce() == StalenessReduce(decay="inverse", alpha=1.0)
+    assert StalenessReduce() != StalenessReduce(decay="exp")
+
+    traces = []
+
+    @partial(jax.jit, static_argnums=(0,))
+    def step(ctx, x):
+        traces.append(type(ctx).__name__)
+
+        def lg(params, batch):
+            loss = jnp.mean(params * batch)
+            return (loss, loss), params
+        (loss, _), g = ctx.wrap_loss_and_grad(lg)(x, x)
+        return loss + jnp.sum(g)
+
+    x = jnp.ones((4,), jnp.float32)
+    step(LOCAL, x)
+    step(LOCAL, x)                         # same ctx: cache hit
+    step(_LR(), x)                         # fresh-but-equal ctx: cache hit
+    assert traces == ["LocalReduce"]
+    step(StalenessReduce(), x)
+    step(StalenessReduce(decay="inverse", alpha=1.0), x)   # equal ⇒ cached
+    assert traces == ["LocalReduce", "StalenessReduce"]
+    step(StalenessReduce(decay="exp"), x)  # different ctx ⇒ one retrace
+    assert traces == ["LocalReduce", "StalenessReduce", "StalenessReduce"]
+
+    # AxisReduce's pmean needs its axis bound: count traces via shard_map
+    mesh = make_data_mesh()
+    ax_traces = []
+
+    @partial(jax.jit, static_argnums=(0,))
+    def ax_step(ctx, x):
+        def inner(s):
+            ax_traces.append(ctx.axis)
+            return ctx.scalar(jnp.mean(s))
+        return shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                         check_rep=False)(x)
+
+    n = mesh.shape["data"]
+    xx = jnp.arange(4 * n, dtype=jnp.float32)
+    ax_step(AxisReduce("data"), xx)
+    ax_step(AxisReduce("data"), xx)        # equal ctx ⇒ no retrace
+    assert ax_traces == ["data"]
+
+
 # ---------------------------------------------------------------------------
 # shard_map engine parity
 # ---------------------------------------------------------------------------
