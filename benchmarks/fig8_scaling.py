@@ -15,6 +15,14 @@ overhead rather than the sync+launch barrier — putting Eq.21's sync cost
 and the async staleness cost side by side on the same configs
 (``fig8_scaling_async-ps.json`` vs ``fig8_scaling.json``).
 
+``--engine hybrid`` runs the unified DP × TP engine on a 2-D
+``(data, model)`` host mesh (``--model-parallel``, default 2 when the
+device count divides): the N forced devices split into data × model,
+``--per-device-batch`` is per *data* shard, and the fitted C2 now also
+carries the tensor-parallel collectives — the cost the ROADMAP's
+multi-host item will amortize.  ``--smoke`` is the CI mode: a reduced
+(devices × batch) grid, few steps, JSON to ``--out``.
+
 Each (devices, batch) cell runs in a fresh child interpreter because
 ``--xla_force_host_platform_device_count`` (the flag that splits the host
 CPU into N XLA devices) must be set before jax initializes; the parent
@@ -51,8 +59,9 @@ def _worker(args) -> None:
 
     from repro.core import ISGDConfig
     from repro.data import FCPRSampler, make_classification
-    from repro.distributed import make_data_parallel_step, prefetched
-    from repro.launch.mesh import make_data_mesh
+    from repro.distributed import (make_hybrid_step, prefetched,
+                                   tensor_axes)
+    from repro.launch.mesh import make_data_mesh, make_host_mesh
     from repro.models import cnn_loss_fn, init_cnn
     from repro.optim import momentum
     import dataclasses
@@ -64,18 +73,25 @@ def _worker(args) -> None:
         return
 
     n_dev = len(jax.devices())
-    global_batch = args.per_device_batch * n_dev
+    if args.engine == "hybrid":
+        mesh = make_host_mesh(model=args.model_parallel)
+    else:
+        mesh = make_data_mesh()
+    n_data = mesh.shape["data"]
+    global_batch = args.per_device_batch * n_data
     cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3,
                               num_classes=10)
     data = make_classification(0, max(global_batch * 4, 256), 16, 3, 10,
                                noise=0.6)
     sampler = FCPRSampler(data, batch_size=global_batch, seed=1)
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
-    mesh = make_data_mesh()
-    init_fn, step = make_data_parallel_step(
+    init_fn, step = make_hybrid_step(
         lambda p, b: cnn_loss_fn(p, cfg, b), momentum(0.9), icfg, mesh,
         lr_fn=lambda _: jnp.asarray(0.05))
     params = init_cnn(jax.random.PRNGKey(0), cfg)
+    if tensor_axes(mesh):
+        from repro.launch import shardings as SH
+        params, _ = SH.hybrid_params_placement(mesh, params)
     state = init_fn(params)
     prefetch = prefetched(sampler, mesh)
 
@@ -89,7 +105,7 @@ def _worker(args) -> None:
     jax.block_until_ready(m["loss"])
     dt = (time.perf_counter() - t0) / steps
     print(f"RESULT {n_dev} {args.per_device_batch} {dt*1e3:.3f} "
-          f"{global_batch/dt:.1f}", flush=True)
+          f"{global_batch/dt:.1f} {global_batch}", flush=True)
 
 
 def _worker_async(args) -> None:
@@ -129,13 +145,13 @@ def _worker_async(args) -> None:
     t0 = time.perf_counter()
     _, _, records = coord.run(params0, sampler, pushes)
     dt = (time.perf_counter() - t0) / len(records)
-    print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f}", flush=True)
+    print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f} {b}", flush=True)
 
 
 def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
-           max_staleness: int):
+           max_staleness: int, model_parallel: int = 1):
     env = dict(os.environ)
-    if engine == "sync":
+    if engine in ("sync", "hybrid"):
         env["XLA_FLAGS"] = (
             env.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={devices}").strip()
@@ -147,14 +163,16 @@ def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
         [sys.executable, "-m", "benchmarks.fig8_scaling", "--worker",
          "--engine", engine, "--workers", str(devices),
          "--max-staleness", str(max_staleness),
+         "--model-parallel", str(model_parallel),
          "--per-device-batch", str(per_device_batch), "--steps", str(steps)],
         capture_output=True, text=True, env=env, cwd=root, timeout=1200)
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT "):
-            _, n, b, ms, sps = line.split()
+            _, n, b, ms, sps, gb = line.split()
             return {"engine": engine, "devices": int(n),
+                    "model_parallel": model_parallel,
                     "per_device_batch": int(b), "ms_per_step": float(ms),
-                    "samples_per_s": float(sps)}
+                    "samples_per_s": float(sps), "global_batch": int(gb)}
     raise RuntimeError(
         f"worker engine={engine} devices={devices} b={per_device_batch} "
         f"failed:\n{proc.stdout}\n{proc.stderr}")
@@ -163,29 +181,36 @@ def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
 def _fit_c1_c2(cells):
     """Least-squares Eq.21 fit t_iter = B/C1 + C2 for one device/worker
     count; returns (C1 samples/s, C2 s).  B is the batch one update
-    consumes: the global batch for the sync engine, the per-worker batch
-    for async-ps (each push is one update)."""
+    consumes (the worker reports it: global batch for sync/hybrid, the
+    per-worker batch for async-ps — each push is one update)."""
     import numpy as np
-    bs = np.array([c["per_device_batch"] *
-                   (c["devices"] if c["engine"] == "sync" else 1)
-                   for c in cells], float)
+    bs = np.array([c["global_batch"] for c in cells], float)
     ts = np.array([c["ms_per_step"] * 1e-3 for c in cells])
     A = np.stack([bs, np.ones_like(bs)], axis=1)
     (inv_c1, c2), *_ = np.linalg.lstsq(A, ts, rcond=None)
     return 1.0 / max(inv_c1, 1e-9), max(c2, 0.0)
 
 
-def run(engine: str = "sync", max_staleness: int = 1):
-    steps = scaled(8, lo=3)
+def _model_parallel_for(engine: str, devices: int) -> int:
+    """hybrid sweep: split even device counts 2-way over 'model' so the
+    cell actually exercises DP × TP; odd/1-device cells stay pure DP."""
+    return 2 if engine == "hybrid" and devices % 2 == 0 else 1
+
+
+def run(engine: str = "sync", max_staleness: int = 1, *,
+        device_counts=DEVICE_COUNTS, per_device_batches=PER_DEVICE_BATCHES,
+        steps=None, out=None, smoke: bool = False):
+    steps = scaled(8, lo=3) if steps is None else steps
     cells = []
-    for n in DEVICE_COUNTS:
-        for b in PER_DEVICE_BATCHES:
-            cells.append(_spawn(engine, n, b, steps, max_staleness))
+    for n in device_counts:
+        for b in per_device_batches:
+            cells.append(_spawn(engine, n, b, steps, max_staleness,
+                                _model_parallel_for(engine, n)))
     fits = {}
     # sync keeps the historical "fig8_scaling_n{n}" emit/JSON names so the
     # checked-in perf trajectory stays one continuous series
     prefix = "fig8_scaling" if engine == "sync" else f"fig8_scaling_{engine}"
-    for n in DEVICE_COUNTS:
+    for n in device_counts:
         mine = [c for c in cells if c["devices"] == n]
         c1, c2 = _fit_c1_c2(mine)
         fits[n] = {"c1_samples_per_s": c1, "c2_s": c2}
@@ -196,30 +221,53 @@ def run(engine: str = "sync", max_staleness: int = 1):
              best_samples_per_s=f"{best['samples_per_s']:.1f}",
              fitted_C1=f"{c1:.0f}", fitted_C2_ms=f"{c2*1e3:.2f}")
     payload = {"engine": engine, "cells": cells, "fits": fits,
-               "steps_per_cell": steps}
+               "steps_per_cell": steps, "mode": "smoke" if smoke else "full"}
     if engine == "async-ps":
         payload["max_staleness"] = max_staleness
-    save_json(prefix, payload)
+    if not smoke:
+        # smoke grids must not overwrite the full-sweep record — the
+        # emit/JSON names above are one continuous perf series
+        save_json(prefix, payload)
+    if out:
+        import json
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        print(f"wrote {out}")
     return cells
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--worker", action="store_true")
-    ap.add_argument("--engine", default="sync", choices=["sync", "async-ps"],
-                    help="sync = shard_map data-parallel; async-ps = "
-                         "parameter-server worker threads")
+    ap.add_argument("--engine", default="sync",
+                    choices=["sync", "hybrid", "async-ps"],
+                    help="sync = shard_map data-parallel; hybrid = the "
+                         "DP x TP engine on a (data, model) mesh; async-ps "
+                         "= parameter-server worker threads")
     ap.add_argument("--workers", type=int, default=2,
                     help="worker mode, async-ps: thread count (parent "
                          "passes the device-count axis here)")
     ap.add_argument("--max-staleness", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="worker mode, hybrid: devices on the 'model' axis "
+                         "(the parent sweep sets 2 for even device counts)")
     ap.add_argument("--per-device-batch", type=int, default=16)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: reduced grid (devices 1,2 x batch 4,16), "
+                         "few steps")
+    ap.add_argument("--out", default=None,
+                    help="also dump the payload JSON to this path "
+                         "(CI artifact)")
     args = ap.parse_args()
     if args.worker:
         _worker(args)
+    elif args.smoke:
+        run(args.engine, args.max_staleness, device_counts=(1, 2),
+            per_device_batches=(4, 16), steps=min(args.steps, 4),
+            out=args.out, smoke=True)
     else:
-        run(args.engine, args.max_staleness)
+        run(args.engine, args.max_staleness, out=args.out)
 
 
 if __name__ == "__main__":

@@ -11,10 +11,15 @@ container; on a real TPU slice this is minutes).
 engine (repro.distributed): the host CPU is split into N XLA devices via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag is
 injected here BEFORE jax initializes, which is why it is parsed ahead of
-the normal argparse pass.  The global --batch must be a multiple of N
-(each device takes batch/N samples); inputs ride the double-buffered
-prefetcher.  (Setting XLA_FLAGS yourself works too and
+the normal argparse pass.  The global --batch must be a multiple of the
+data-axis size (each data shard takes batch/data samples); inputs ride the
+double-buffered prefetcher.  (Setting XLA_FLAGS yourself works too and
 takes precedence; --devices is a convenience for single-host smoke runs.)
+
+``--model-parallel M`` (with ``--devices N``, M dividing N) switches both
+legs to the hybrid DP × TP engine on a 2-D ``(data=N/M, model=M)`` mesh:
+params sharded over 'model' (launch/shardings.py), batch over 'data', the
+same ``make_step_core`` body — the loss-driven LR keeps its ψ̄ read.
 
 ``--chunk-steps K`` switches both legs to the fused engine (ISSUE 2): the
 permuted epoch lives on device in a ``DeviceRing`` and each host dispatch
@@ -72,8 +77,8 @@ from repro.core import ISGDConfig                          # noqa: E402
 from repro.data import (DeviceRing, FCPRSampler,           # noqa: E402
                         make_lm_tokens, ring_or_prefetch)
 from repro.distributed import (                            # noqa: E402
-    make_chunked_data_parallel_step, make_data_parallel_step, prefetched)
-from repro.launch.mesh import make_data_mesh               # noqa: E402
+    make_chunked_hybrid_step, make_hybrid_step, prefetched, tensor_axes)
+from repro.launch.mesh import make_data_mesh, make_host_mesh  # noqa: E402
 from repro.models import build_model                       # noqa: E402
 from repro.optim import momentum                           # noqa: E402
 from repro.train import (checkpoints,                      # noqa: E402
@@ -103,6 +108,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="split the host into N XLA devices and use the "
                          "data-parallel engine (see module docstring)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="with --devices N: hybrid DP x TP engine, M "
+                         "devices on the 'model' axis (M must divide N)")
     ap.add_argument("--chunk-steps", type=int, default=1,
                     help="K>1 = fused engine: K steps per dispatch over the "
                          "device-resident FCPR ring (steps rounded up to "
@@ -123,9 +131,19 @@ def main():
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
-    if args.devices > 1 and args.batch % n_dev:
+    if args.model_parallel > 1:
+        if args.async_ps:
+            raise SystemExit("--model-parallel does not compose with "
+                             "--async-ps (workers are host threads)")
+        mesh = make_host_mesh(model=args.model_parallel)
+    elif args.devices > 1:
+        mesh = make_data_mesh()
+    else:
+        mesh = None
+    if mesh is not None and args.batch % mesh.shape["data"]:
         raise SystemExit(f"--batch {args.batch} must be a multiple of the "
-                         f"{n_dev} devices (it is split across them)")
+                         f"{mesh.shape['data']} 'data'-axis devices (it is "
+                         f"split across them)")
 
     cfg = model_for(args.params)
     model = build_model(cfg)
@@ -138,14 +156,18 @@ def main():
     data = make_lm_tokens(0, n_seqs=64, seq_len=args.seq, vocab=cfg.vocab_size)
     sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=2.0, stop=3)
-    mesh = make_data_mesh() if args.devices > 1 else None
+    tp = mesh is not None and bool(tensor_axes(mesh))
+    if tp:
+        from repro.launch import shardings as SH
+        params0, _ = SH.hybrid_params_placement(mesh, params0)
 
     K = args.chunk_steps
     ring = None
     if K > 1:
         args.steps = -(-args.steps // K) * K         # whole chunks
         # one epoch upload serves both legs (identical permuted data)
-        ring = DeviceRing(sampler.epoch_arrays(), args.batch, mesh=mesh)
+        ring = DeviceRing(sampler.epoch_arrays(), args.batch, mesh=mesh,
+                          relayout=not tp)
     results = {}
     for name, inconsistent in (("sgd", False), ("isgd", True)):
         lr_fn = lambda _: jnp.asarray(args.lr)       # noqa: E731
@@ -175,7 +197,7 @@ def main():
         elif K > 1:
             # fused engine: K steps per dispatch, metrics fetched per chunk
             if mesh is not None:
-                init_fn, chunk_fn = make_chunked_data_parallel_step(
+                init_fn, chunk_fn = make_chunked_hybrid_step(
                     model.loss_fn, momentum(0.9), icfg, mesh,
                     chunk_steps=K, inconsistent=inconsistent, lr_fn=lr_fn)
             else:
@@ -192,10 +214,11 @@ def main():
                       f"ψ̄={log.psi_bar[-1]:.4f} accel={log.accelerated[-1]}")
         else:
             if mesh is not None:
-                init_fn, step_fn = make_data_parallel_step(
+                init_fn, step_fn = make_hybrid_step(
                     model.loss_fn, momentum(0.9), icfg, mesh,
                     inconsistent=inconsistent, lr_fn=lr_fn)
-                feed = ring_or_prefetch(sampler, mesh=mesh) \
+                feed = ring_or_prefetch(sampler, mesh=mesh,
+                                        relayout=not tp) \
                     if args.device_ring else prefetched(sampler, mesh)
             else:
                 init_fn, step_fn = make_train_step(

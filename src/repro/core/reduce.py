@@ -79,9 +79,17 @@ class AxisReduce(ReduceCtx):
     Shard losses are per-shard *means*, so a pmean of equal-sized shards
     equals the global-batch mean — the single-device reference — up to f32
     reassociation (the parity test bounds this at 1e-5 over 20 steps).
+
+    ``axis`` may also be a *tuple* of axis names — the data sub-axes of a
+    larger mesh (e.g. ``("pod", "data")`` on the production 3-D mesh): the
+    reduction then spans exactly those axes and leaves the remaining
+    (model-parallel) axes untouched, which is what the hybrid DP × TP engine
+    needs — ψ/grads averaged over the data sub-mesh while GSPMD handles the
+    tensor-parallel axis.  Tuples keep the dataclass hashable, so the jitted
+    step still specializes without retracing.
     """
 
-    axis: str = "data"
+    axis: str | tuple = "data"
 
     def scalar(self, x):
         return jax.lax.pmean(x, self.axis)

@@ -20,7 +20,18 @@ Two layouts:
     ``shard_map`` a device slices ``[t*bs_local, (t+1)*bs_local)`` of its
     local block and gets exactly the rows the per-step engine's
     ``P(axis)``-sharded global batch would have given it, so ring and
-    host-sampler feeds are bit-identical.
+    host-sampler feeds are bit-identical.  The relayout is keyed to the
+    ``axis`` *sub-axis* of the mesh, not its total size: on the hybrid
+    engine's 2-D ``(data, model)`` mesh the epoch splits over the data
+    sub-axis only and ``P(axis)`` replicates each block across the model
+    axis — every model peer of a data shard serves identical rows.
+
+    ``relayout=False`` keeps the **global row order** while still
+    distributing the epoch ``P(axis)`` across the mesh — the layout the
+    hybrid engine's GSPMD strategy wants: its in-scan ``dynamic_slice``
+    picks the *global* batch ``[t*bs, (t+1)*bs)`` and the partitioner
+    re-lays it out per the step's constraints (the per-device relayout
+    only exists so a *manual* shard_map body can slice its own rows).
 
 ``ring_or_prefetch`` is the configurable-byte-budget front door: epochs that
 fit are promoted to a ``DeviceRing``; epochs that don't fall back to the
@@ -53,7 +64,7 @@ def _shard_layout(v: np.ndarray, n_batches: int, n_dev: int) -> np.ndarray:
 
 class DeviceRing:
     def __init__(self, epoch_arrays: Dict[str, np.ndarray], batch_size: int,
-                 *, mesh=None, axis: str = "data"):
+                 *, mesh=None, axis: str = "data", relayout: bool = True):
         n = next(iter(epoch_arrays.values())).shape[0]
         for v in epoch_arrays.values():
             assert v.shape[0] == n, "epoch arrays must share the leading dim"
@@ -69,24 +80,34 @@ class DeviceRing:
             self.arrays = {k: jax.device_put(np.ascontiguousarray(v))
                            for k, v in epoch_arrays.items()}
             self._slice = jax.jit(self._slice_unsharded)
-        else:
-            from jax.sharding import NamedSharding
-            from jax.sharding import PartitionSpec as P
-            n_dev = mesh.shape[axis]
-            assert batch_size % n_dev == 0, \
-                f"batch {batch_size} not divisible by {n_dev} '{axis}' devices"
-            self.n_devices = n_dev
-            self.local_batch_size = batch_size // n_dev
-            sh = NamedSharding(mesh, P(axis))
+            return
+
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        assert axis in mesh.shape, \
+            f"ring axis {axis!r} not in mesh axes {tuple(mesh.shape)}"
+        n_dev = mesh.shape[axis]
+        assert batch_size % n_dev == 0, \
+            f"batch {batch_size} not divisible by {n_dev} '{axis}' devices"
+        self.n_devices = n_dev
+        self.local_batch_size = batch_size // n_dev
+        sh = NamedSharding(mesh, P(axis))
+        if not relayout:
+            # global row order, distributed placement (GSPMD consumers)
             self.arrays = {
-                k: jax.device_put(_shard_layout(np.asarray(v),
-                                                self.n_batches, n_dev), sh)
+                k: jax.device_put(np.ascontiguousarray(v), sh)
                 for k, v in epoch_arrays.items()}
-            from jax.experimental.shard_map import shard_map
-            sliced = shard_map(self._slice_local, mesh=mesh,
-                               in_specs=(P(axis), P()), out_specs=P(axis),
-                               check_rep=False)
-            self._slice = jax.jit(sliced)
+            self._slice = jax.jit(self._slice_unsharded)
+            return
+        self.arrays = {
+            k: jax.device_put(_shard_layout(np.asarray(v),
+                                            self.n_batches, n_dev), sh)
+            for k, v in epoch_arrays.items()}
+        from jax.experimental.shard_map import shard_map
+        sliced = shard_map(self._slice_local, mesh=mesh,
+                           in_specs=(P(axis), P()), out_specs=P(axis),
+                           check_rep=False)
+        self._slice = jax.jit(sliced)
 
     # -- slicing --------------------------------------------------------
     def _slice_unsharded(self, arrays, t):
@@ -119,7 +140,7 @@ class DeviceRing:
 
 def ring_or_prefetch(sampler, *, mesh=None, axis: str = "data",
                      byte_budget: Optional[int] = DEFAULT_BYTE_BUDGET,
-                     prefetch_depth: int = 2):
+                     prefetch_depth: int = 2, relayout: bool = True):
     """Promote ``sampler``'s permuted epoch to a :class:`DeviceRing` when
     its *per-replica* share fits ``byte_budget`` bytes (``None`` = always
     fits; a sharded ring puts only 1/n_dev of the epoch on each device);
@@ -135,4 +156,4 @@ def ring_or_prefetch(sampler, *, mesh=None, axis: str = "data",
             from repro.distributed.prefetch import prefetched
             return prefetched(sampler, mesh, axis=axis, depth=prefetch_depth)
     return DeviceRing(sampler.epoch_arrays(), sampler.batch_size,
-                      mesh=mesh, axis=axis)
+                      mesh=mesh, axis=axis, relayout=relayout)

@@ -1,6 +1,9 @@
-"""Distributed ISGD (paper §6): the synchronous shard_map data-parallel
-engine, reduction contexts, host->device prefetching, the N-device parity
-check — and the asynchronous parameter-server engine (§6.2) in
+"""Distributed ISGD (paper §6): the unified synchronous engine — pure
+data parallelism and hybrid DP × TP on a 2-D ``(data, model)`` mesh
+(``make_hybrid_step``; ``make_data_parallel_step`` is its pure-data alias)
+— reduction contexts, host->device prefetching, the N-device parity checks
+(``parity`` and the ψ̄-schedule ``hybrid_parity`` matrix) — and the
+asynchronous parameter-server engine (§6.2) in
 ``repro.distributed.async_ps`` (staleness-bounded workers, server-side SPC
 controller, ``w(τ)``-weighted delta folding).
 
@@ -27,11 +30,15 @@ _EXPORTS = {
     "ParamServer": "repro.distributed.async_ps",
     "records_to_trainlog": "repro.distributed.async_ps",
     "run_async_parity": "repro.distributed.async_ps",
+    "make_hybrid_step": "repro.distributed.data_parallel",
+    "make_chunked_hybrid_step": "repro.distributed.data_parallel",
     "make_data_parallel_step": "repro.distributed.data_parallel",
     "make_chunked_data_parallel_step": "repro.distributed.data_parallel",
+    "run_hybrid_parity": "repro.distributed.hybrid_parity",
     "batch_sharding": "repro.distributed.data_parallel",
     "replicated": "repro.distributed.data_parallel",
     "data_axis_size": "repro.distributed.data_parallel",
+    "tensor_axes": "repro.distributed.data_parallel",
     "PrefetchSampler": "repro.distributed.prefetch",
     "prefetched": "repro.distributed.prefetch",
     "run_parity": "repro.distributed.parity",

@@ -1,22 +1,48 @@
-"""shard_map data-parallel ISGD engine (paper §6, Fig. 8).
+"""shard_map/GSPMD ISGD engine: pure data parallelism (paper §6, Fig. 8)
+and the hybrid DP × TP regime on a 2-D ``(data, model)`` mesh.
 
-Each device computes loss/gradients on its shard of the global batch; the
-gradients are all-reduced (``pmean`` over the ``data`` axis) and the control
-statistic ψ is the globally reduced batch-mean loss.  Because *both* go
-through ``AxisReduce`` inside the per-device function, the ``lax.cond``
-accelerate predicate and every trip of the subproblem ``while_loop`` are
-computed from replicated values — every device takes the identical branch,
-which is the invariant ``core/isgd.py`` documents and this module enforces.
+One engine, one step path.  ``make_hybrid_step`` runs the *same* step body
+every other synchronous engine uses — ``train.trainer.make_step_core`` —
+so the loss-driven LR (ψ̄ read from the queue with its one-step lag, Alg.1
+line 19) is identical everywhere.  (Historical note: the old pjit runner
+hand-rolled its own step closure and froze the schedule at ``lr_fn(0.0)``;
+that closure is gone and tests/test_hybrid.py pins the fix.)  The engine
+picks its execution strategy from the mesh:
 
-Layout: params and ISGD state (queue, counters, velocity) are replicated
-(``P()``); only the batch is sharded (leading dim over ``data``).  This is
-the pure data-parallel regime the paper scales (its multi-GPU experiments
-replicate the model); the tensor/FSDP-parallel pjit path in ``launch/`` is
-complementary and untouched.
+  * **manual shard_map over the data axis** — when every non-data axis is
+    trivial (a 1-D ``('data',)`` mesh, or ``(data, model=1)``).  The batch
+    is sharded over ``data`` (leading dim); each device computes
+    loss/gradients on its shard and ``AxisReduce`` pmeans both, so the
+    ``lax.cond`` accelerate predicate and every trip of the subproblem
+    ``while_loop`` see replicated values — the invariant ``core/isgd.py``
+    documents.  Params and ISGD state are replicated.  This is the pure
+    data-parallel regime the paper scales (its multi-GPU experiments
+    replicate the model); ``make_data_parallel_step`` remains as the alias.
 
-``make_data_parallel_step`` mirrors ``train.trainer.make_train_step`` —
-same ``(init_fn, step_fn)`` contract, same metrics surface — so the host
-loop, examples, and benchmarks can swap engines with one line.
+  * **GSPMD (pjit-with-constraints)** — when a model/tensor axis has size
+    > 1.  The identical ``make_step_core`` body is jitted as a *global*
+    program: params/velocity sharded over ``model`` by their placement
+    (``launch/shardings.py``) plus any activation-sharding constraints,
+    batch pinned to ``P(data)`` by an in-step ``with_sharding_constraint``.
+    The reduction context stays ``LOCAL`` because the traced program
+    already computes the *global*-batch loss/gradients — GSPMD partitions
+    the batch dim over ``data`` and inserts the cross-device reductions
+    itself, so ψ and the grads are the same real numbers the manual
+    strategy pmeans together (associated differently in f32; the hybrid
+    parity suite bounds the difference and pins bit-exactness on the legs
+    where the layouts coincide).
+
+  Why two strategies instead of ``shard_map(..., auto={'model'})``: XLA's
+  SPMD partitioner (jax 0.4.37) cannot partition ``lax.scan`` inside a
+  manual subgroup (``Check failed: sharding.IsManualSubgroup()``), and
+  scan is load-bearing everywhere here — the transformer block stack, the
+  fused chunk engine, micro-batch accumulation.  The shardy partitioner
+  lifts the limitation; fold the strategies together when it becomes the
+  default.
+
+``make_hybrid_step`` mirrors ``train.trainer.make_train_step`` — same
+``(init_fn, step_fn)`` contract, same metrics surface — so the host loop,
+examples, and benchmarks can swap engines with one line.
 """
 from __future__ import annotations
 
@@ -28,11 +54,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
-from repro.core.reduce import AxisReduce
+from repro.core import ISGDConfig
+from repro.core.reduce import LOCAL, AxisReduce
 from repro.optim.base import UpdateRule
 from repro.train.chunked import chunk_over_ring
-from repro.train.trainer import make_loss_and_grad, make_step_core
+from repro.train.trainer import make_step_core
 
 
 def data_axis_size(mesh: Mesh, axis: str = "data") -> int:
@@ -42,8 +68,9 @@ def data_axis_size(mesh: Mesh, axis: str = "data") -> int:
 def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
     """NamedSharding for host->device batch transfer (leading dim over data).
 
-    Matches the step's ``in_specs`` so the prefetcher's ``device_put`` lands
-    shards exactly where ``shard_map`` consumes them — no resharding copy.
+    Matches the step's data layout so the prefetcher's ``device_put`` lands
+    shards exactly where the engine consumes them — no resharding copy.
+    On a 2-D mesh the batch is replicated over the model axis.
     """
     return NamedSharding(mesh, P(axis))
 
@@ -52,88 +79,158 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def make_data_parallel_step(loss_fn: Callable, rule: UpdateRule,
-                            isgd_cfg: ISGDConfig, mesh: Mesh, *,
-                            axis: str = "data", inconsistent: bool = True,
-                            lr_fn: Optional[Callable] = None,
-                            micro_batches: int = 1, donate: bool = True):
+def _data_axes(axis) -> tuple:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def tensor_axes(mesh: Mesh, axis: str = "data") -> tuple:
+    """Non-data mesh axes with size > 1 — the tensor/model-parallel part.
+
+    Empty ⇒ the mesh is pure data parallel and the engine uses the manual
+    shard_map strategy; non-empty ⇒ the GSPMD strategy (see module doc).
+    """
+    data = set(_data_axes(axis))
+    return tuple(a for a in mesh.axis_names
+                 if a not in data and mesh.shape[a] > 1)
+
+
+def _sharded_over_data(fn: Callable, mesh: Mesh, axis):
+    """``shard_map`` a 4-ary step/chunk body manually over the data axis:
+    args 0/1/3 (state, params, lr-or-j0) replicated, arg 2 (batch or ring)
+    sharded on its leading dim.  Only valid when ``tensor_axes`` is empty —
+    any trivial (size-1) non-data axis is bound manually too, which is a
+    no-op.
+
+    check_rep=False: replication of the outputs follows from the pmean'd
+    grads/ψ, but the rep checker can't see through cond/while_loop bodies.
+    """
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(), P(), P(axis), P()),
+                     out_specs=(P(), P(), P()),
+                     check_rep=False)
+
+
+def _constrain_batch(mesh: Mesh, axis, batch):
+    """Pin every divisible batch leaf's leading dim to the data axis — the
+    GSPMD strategy's equivalent of the manual in_specs ``P(axis)``."""
+    size = 1
+    for a in _data_axes(axis):
+        size *= mesh.shape[a]
+    sh = NamedSharding(mesh, P(axis))
+
+    def leaf(x):
+        if getattr(x, "ndim", 0) and x.shape[0] % size == 0:
+            return jax.lax.with_sharding_constraint(x, sh)
+        return x
+
+    return jax.tree.map(leaf, batch)
+
+
+def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
+                     isgd_cfg: ISGDConfig, mesh: Mesh, *,
+                     axis: str = "data", inconsistent: bool = True,
+                     lr_fn: Optional[Callable] = None,
+                     micro_batches: int = 1, donate: bool = True):
     """Returns ``(init_fn, step_fn)`` with the ``make_train_step`` contract.
 
     ``step_fn(state, params, batch, lr=None) -> (state, params, metrics)``
     where ``batch`` leaves carry the *global* batch on their leading dim
-    (divisible by the ``data`` axis size) and params/state are replicated.
-    All outputs are replicated: grads are pmean'd before the base update and
-    ψ before the queue push, so every device computes the same new params.
+    (divisible by the ``data`` axis size).  Params/state are replicated
+    over ``data``; over any tensor-parallel axis their layout follows the
+    caller's placement (``launch/shardings.py``).  All outputs are
+    replicated over ``data``: grads are globally reduced before the base
+    update and ψ before the queue push, so every data shard computes the
+    same new params.  When ``lr`` is not passed, ``lr_fn`` reads ψ̄ from
+    the queue of the *incoming* state — the one-step lag of Alg.1 line 19,
+    identical on both strategies because both run ``make_step_core``.
     """
-    lg = make_loss_and_grad(loss_fn, micro_batches)
-    rctx = AxisReduce(axis)
+    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
 
-    def init_fn(params):
-        return isgd_init(rule, isgd_cfg, params)
+    if tensor_axes(mesh, axis):
+        # GSPMD strategy: the global program, partitioned by placement +
+        # constraints.  LOCAL reduction — the traced loss/grads already
+        # span the global batch.
+        init_fn, core_step = make_step_core(
+            loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+            reduce_ctx=LOCAL, micro_batches=micro_batches)
 
-    def device_step(state, params, batch, lr):
-        if inconsistent:
-            return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
-                             reduce_ctx=rctx)
-        return consistent_step(rule, lg, state, params, batch, lr,
-                               reduce_ctx=rctx)
+        def step_fn(state, params, batch, lr=None):
+            return core_step(state, params,
+                             _constrain_batch(mesh, axis, batch), lr)
 
-    # check_rep=False: replication of the outputs follows from the pmean'd
-    # grads/ψ, but the rep checker can't see through cond/while_loop bodies.
-    sharded = shard_map(device_step, mesh=mesh,
-                        in_specs=(P(), P(), P(axis), P()),
-                        out_specs=(P(), P(), P()),
-                        check_rep=False)
+        return init_fn, jax.jit(step_fn, **jit_kwargs)
+
+    # manual shard_map strategy: per-shard body + explicit AxisReduce
+    init_fn, core_step = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=AxisReduce(axis), micro_batches=micro_batches)
+    sharded = _sharded_over_data(core_step, mesh, axis)
 
     def step_fn(state, params, batch, lr=None):
         if lr is None:
             from repro.core import control as C
             lr = lr_fn(C.mean(state.queue))
-        lr = jnp.asarray(lr, jnp.float32)
-        return sharded(state, params, batch, lr)
+        return sharded(state, params, batch, jnp.asarray(lr, jnp.float32))
 
-    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(step_fn, **jit_kwargs)
 
 
-def make_chunked_data_parallel_step(loss_fn: Callable, rule: UpdateRule,
-                                    isgd_cfg: ISGDConfig, mesh: Mesh, *,
-                                    chunk_steps: int, axis: str = "data",
-                                    inconsistent: bool = True,
-                                    lr_fn: Optional[Callable] = None,
-                                    micro_batches: int = 1,
-                                    donate: bool = True):
-    """Fused K-steps-per-dispatch twin of ``make_data_parallel_step``.
+def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
+                             isgd_cfg: ISGDConfig, mesh: Mesh, *,
+                             chunk_steps: int, axis: str = "data",
+                             inconsistent: bool = True,
+                             lr_fn: Optional[Callable] = None,
+                             micro_batches: int = 1, donate: bool = True):
+    """Fused K-steps-per-dispatch twin of ``make_hybrid_step``.
 
-    The ``lax.scan`` over ``repro.train.chunked.chunk_over_ring`` runs
-    *inside* the ``shard_map``: each device slices its own batch shard out
-    of its local block of the sharded :class:`DeviceRing` (layout documented
-    in ``repro.data.device_ring``) and runs K full ISGD steps without the
-    host in the loop.  ψ/grads pmean through ``AxisReduce`` exactly as in
-    the per-step engine, so cond/while control flow — and therefore the
-    scan carry — stays replicated across devices.
+    The ``lax.scan`` over ``repro.train.chunked.chunk_over_ring`` runs K
+    full ISGD steps without the host in the loop; metrics come back stacked
+    (chunk_steps,).  Strategy follows the mesh exactly as in the per-step
+    engine:
+
+      * manual shard_map — the scan runs per device; each data shard slices
+        its own rows out of its local block of a *relaid-out* sharded
+        :class:`DeviceRing` (``ring_arrays`` sharded ``P(axis)``, layout
+        documented in ``repro.data.device_ring``);
+      * GSPMD — the scan is one global program; ``ring_arrays`` keep the
+        *global* row order (``DeviceRing(relayout=False)``) and the in-scan
+        ``dynamic_slice`` picks the global batch, which the partitioner
+        re-lays-out per the step's constraints.
 
     Returns ``(init_fn, chunk_fn)``; ``chunk_fn(state, params, ring_arrays,
-    j0) -> (state, params, stacked_metrics)`` with ``ring_arrays`` sharded
-    ``P(axis)`` (a sharded ``DeviceRing``'s ``.arrays``), metrics stacked
-    (chunk_steps,) and replicated, and ``(state, params)`` donated.
+    j0) -> (state, params, stacked_metrics)`` with ``(state, params)``
+    donated.
     """
     assert lr_fn is not None, "chunked engine needs lr_fn (no per-step host)"
+    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+
+    if tensor_axes(mesh, axis):
+        init_fn, step_fn = make_step_core(
+            loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+            reduce_ctx=LOCAL, micro_batches=micro_batches)
+        chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
+
+        def chunk_fn(state, params, ring_arrays, j0):
+            return chunk(state, params, ring_arrays,
+                         jnp.asarray(j0, jnp.int32))
+
+        return init_fn, jax.jit(chunk_fn, **jit_kwargs)
+
     init_fn, step_fn = make_step_core(
         loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
         reduce_ctx=AxisReduce(axis), micro_batches=micro_batches)
     device_chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
-
-    # check_rep=False for the same reason as the per-step engine: the rep
-    # checker can't see through the cond/while bodies inside the scan.
-    sharded = shard_map(device_chunk, mesh=mesh,
-                        in_specs=(P(), P(), P(axis), P()),
-                        out_specs=(P(), P(), P()),
-                        check_rep=False)
+    sharded = _sharded_over_data(device_chunk, mesh, axis)
 
     def chunk_fn(state, params, ring_arrays, j0):
         return sharded(state, params, ring_arrays,
                        jnp.asarray(j0, jnp.int32))
 
-    jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(chunk_fn, **jit_kwargs)
+
+
+# The pure data-parallel engine IS the hybrid engine on a pure-data mesh
+# (manual shard_map strategy); the historical names stay as aliases so
+# callers that never go tensor-parallel keep reading naturally.
+make_data_parallel_step = make_hybrid_step
+make_chunked_data_parallel_step = make_chunked_hybrid_step

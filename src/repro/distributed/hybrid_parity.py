@@ -1,0 +1,287 @@
+"""Hybrid DP × TP parity matrix: the unified engine vs its references.
+
+The headline regression under test (ISSUE 4): the old pjit runner evaluated
+``lr_fn(0.0)`` instead of ``lr_fn(ψ̄)``, silently freezing the paper's
+loss-driven LR schedule (Alg.1 line 19) on the tensor-parallel path.  Every
+leg here drives a **ψ̄-dependent** ``lr_fn`` — if any engine drops the
+running loss average from the schedule, its parameter trajectory diverges
+from the reference within an epoch and the bit-exact comparison fails
+loudly.  A control leg re-runs the reference with the LR frozen at
+``lr_fn(0.0)`` and asserts it *differs*, proving the matrix can actually
+catch the bug.
+
+Legs (``n`` = available devices; all over ≥ 2 FCPR epochs with the
+subproblem firing):
+
+  * ``hybrid(1,1)``   vs per-step ``make_train_step``      — bit-exact
+  * ``hybrid(n,1)``   vs data-parallel engine (1-D mesh)   — bit-exact
+  * ``hybrid(1,n)``   vs per-step ``make_train_step``      — bit-exact
+    (GSPMD strategy; the tiny test params stay replicated, so the global
+    program is the reference program)
+  * ``chunked(n,1)``  K=4 fused scan vs ``hybrid(n,1)``    — bit-exact
+  * ``chunked(1,n)``  K=4 GSPMD scan vs the reference      — bit-exact
+  * ``sharded-tp``    a (128, 8) weight actually sharded over model=2 vs
+    the reference — allclose(tol): cross-shard reductions reassociate f32
+  * ``data-parallel`` vs the reference                      — allclose(tol)
+
+Usable two ways (same pattern as ``repro.distributed.parity``):
+
+  * in-process: ``run_hybrid_parity()`` on whatever devices exist;
+  * subprocess with a forced device count (the CI acceptance check):
+
+      PYTHONPATH=src python -m repro.distributed.hybrid_parity --devices 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_host_devices(n: int) -> None:
+    assert "jax" not in sys.modules, "--devices must be set before jax init"
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def run_hybrid_parity(steps: int = 32, K: int = 4, tol: float = 1e-5,
+                      verbose: bool = False) -> dict:
+    """Returns {"ok": bool, "devices": int, "legs": {name: report}, ...}."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import ISGDConfig
+    from repro.data import DeviceRing, FCPRSampler
+    from repro.distributed.data_parallel import (make_chunked_hybrid_step,
+                                                 make_data_parallel_step,
+                                                 make_hybrid_step)
+    from repro.launch.mesh import make_data_mesh, make_host_mesh
+    from repro.optim import momentum
+    from repro.train import make_train_step
+
+    n_dev = len(jax.devices())
+    n_batches = 4
+    batch_size = 8 * n_dev
+    assert steps % K == 0 and steps >= 2 * n_batches, (steps, K, n_batches)
+
+    # dim=6 matches tests/test_chunked.py's canonical problem: XLA:CPU
+    # compiles its straight-line and in-scan step bodies to identical
+    # float programs there (wider dims pick up 1-ulp fusion differences,
+    # which would blur what this matrix pins — schedule drift, not ulps)
+    dim = 6
+    rng = np.random.RandomState(0)
+    xs = rng.randn(batch_size * n_batches, dim).astype(np.float32)
+    ys = ((xs @ rng.randn(dim, 1).astype(np.float32)).ravel()
+          / np.sqrt(dim)).astype(np.float32)
+    ys[:batch_size] += 3.0                      # the under-trained batch
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch_size, seed=1)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    rule = momentum(0.9)
+    icfg = ISGDConfig(n_batches=n_batches, k_sigma=1.0, stop=3, zeta=0.01)
+
+    def lr_fn(psi_bar):
+        # ψ̄-dependent on purpose: freezing ψ̄=0 shifts the whole trajectory
+        return jnp.asarray(0.01) + 0.001 * jnp.minimum(psi_bar, 1.0)
+
+    host = [{k: jnp.asarray(v) for k, v in sampler(j).items()}
+            for j in range(steps)]
+
+    def drive(step_fn, init_fn, feed):
+        p = jax.tree.map(jnp.copy, params0)
+        s = init_fn(p)
+        ms = []
+        for j in range(steps):
+            s, p, m = step_fn(s, p, feed(j))
+            ms.append(jax.tree.map(np.asarray, m))
+        stacked = {k: np.stack([m[k] for m in ms]) for k in ms[0]}
+        return s, p, stacked
+
+    def drive_chunked(chunk_fn, init_fn, ring):
+        p = jax.tree.map(jnp.copy, params0)
+        s = init_fn(p)
+        outs = []
+        for c in range(steps // K):
+            s, p, ms = chunk_fn(s, p, ring.arrays, c * K)
+            outs.append(jax.tree.map(np.asarray, ms))
+        stacked = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+        return s, p, stacked
+
+    def compare(ref, got, exact):
+        """(ok, max_param_dev) for (state, params, metrics) triples."""
+        r_s, r_p, r_m = ref
+        g_s, g_p, g_m = got
+        dev = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                  for a, b in zip(jax.tree.leaves(r_p), jax.tree.leaves(g_p)))
+        ok = True
+        for key in ("loss", "limit", "psi_bar", "accelerated", "sub_iters"):
+            a, b = r_m[key], g_m[key]
+            finite = np.isfinite(a) & np.isfinite(b)
+            if exact:
+                ok &= bool(np.array_equal(a, b))
+            else:
+                ok &= bool(np.array_equal(a[~finite], b[~finite])
+                           if (~finite).any() else True)
+                ok &= bool(np.allclose(a[finite], b[finite],
+                                       atol=tol, rtol=tol))
+        ok &= (dev == 0.0) if exact else (dev <= tol)
+        ok &= int(r_s.accel_count) == int(g_s.accel_count) if exact else True
+        return ok, dev
+
+    legs = {}
+
+    # reference: the single-device per-step engine
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=lr_fn,
+                                    donate=False)
+    ref = drive(step, init_fn, lambda j: host[j])
+    assert ref[2]["accelerated"].sum() > 0, "subproblem never fired"
+
+    # control: the bug being tested for — LR frozen at lr_fn(0.0) — must
+    # produce a DIFFERENT trajectory, or this matrix couldn't catch it
+    finit, fstep = make_train_step(loss_fn, rule, icfg,
+                                   lr_fn=lambda _: lr_fn(0.0), donate=False)
+    frozen = drive(fstep, finit, lambda j: host[j])
+    froze_differs = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ref[1]), jax.tree.leaves(frozen[1])))
+    legs["frozen-lr-differs"] = {"ok": froze_differs, "max_param": None}
+
+    # hybrid (1, 1): bit-exact vs the reference
+    mesh11 = make_host_mesh(model=1, devices=[jax.devices()[0]])
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh11,
+                                    lr_fn=lr_fn, donate=False)
+    got = drive(hstep, hinit, lambda j: host[j])
+    ok, dev = compare(ref, got, exact=True)
+    legs["hybrid(1,1)"] = {"ok": ok, "max_param": dev}
+
+    # data-parallel engine (1-D mesh): allclose vs the reference
+    mesh_d = make_data_mesh()
+    dinit, dstep = make_data_parallel_step(loss_fn, rule, icfg, mesh_d,
+                                           lr_fn=lr_fn, donate=False)
+    dp = drive(dstep, dinit, lambda j: host[j])
+    ok, dev = compare(ref, dp, exact=n_dev == 1)
+    legs["data-parallel"] = {"ok": ok, "max_param": dev}
+
+    # hybrid (n, 1): manual strategy — bit-exact vs data-parallel
+    mesh_n1 = make_host_mesh(model=1)
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh_n1,
+                                    lr_fn=lr_fn, donate=False)
+    hy_n1 = drive(hstep, hinit, lambda j: host[j])
+    ok, dev = compare(dp, hy_n1, exact=True)
+    legs["hybrid(n,1)=dp"] = {"ok": ok, "max_param": dev}
+
+    # hybrid (1, n): GSPMD strategy — bit-exact vs the reference
+    mesh_1n = make_host_mesh(model=n_dev)
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh_1n,
+                                    lr_fn=lr_fn, donate=False)
+    got = drive(hstep, hinit, lambda j: host[j])
+    ok, dev = compare(ref, got, exact=True)
+    legs["hybrid(1,n)"] = {"ok": ok, "max_param": dev}
+
+    # chunked K on (n, 1): fused manual scan — bit-exact vs hybrid(n,1)
+    ring = DeviceRing(sampler.epoch_arrays(), batch_size, mesh=mesh_n1)
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh_n1,
+                                            chunk_steps=K, lr_fn=lr_fn,
+                                            donate=False)
+    got = drive_chunked(chunk, cinit, ring)
+    ok, dev = compare(hy_n1, got, exact=True)
+    legs[f"chunked(n,1)K{K}"] = {"ok": ok, "max_param": dev}
+
+    # chunked K on (1, n): fused GSPMD scan — bit-exact vs the reference
+    ring_g = DeviceRing(sampler.epoch_arrays(), batch_size, mesh=mesh_1n,
+                        relayout=False)
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh_1n,
+                                            chunk_steps=K, lr_fn=lr_fn,
+                                            donate=False)
+    got = drive_chunked(chunk, cinit, ring_g)
+    ok, dev = compare(ref, got, exact=True)
+    legs[f"chunked(1,n)K{K}"] = {"ok": ok, "max_param": dev}
+
+    # sharded-tp: a weight genuinely split over model=2 (allclose — the
+    # cross-shard loss/grad reductions reassociate f32)
+    if n_dev % 2 == 0:
+        wdim, out = 128, 8
+        xs2 = rng.randn(batch_size * n_batches, wdim).astype(np.float32)
+        W = rng.randn(wdim, out).astype(np.float32)
+        ys2 = (xs2 @ W / np.sqrt(wdim)).astype(np.float32)
+        ys2[:batch_size] += 3.0
+        smp2 = FCPRSampler({"x": xs2, "y": ys2}, batch_size=batch_size,
+                           seed=1)
+        host2 = [{k: jnp.asarray(v) for k, v in smp2(j).items()}
+                 for j in range(steps)]
+
+        def loss2(params, batch):
+            loss = jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+            return loss, loss
+
+        p2 = {"w": jnp.zeros((wdim, out), jnp.float32)}
+        r_init, r_step = make_train_step(loss2, rule, icfg, lr_fn=lr_fn,
+                                         donate=False)
+
+        def drive2(step_fn, init_fn, p0):
+            p = jax.tree.map(jnp.copy, p0)
+            s = init_fn(p)
+            accel = 0
+            for j in range(steps):
+                s, p, m = step_fn(s, p, host2[j])
+                accel += int(np.asarray(m["accelerated"]))
+            return s, p, accel
+
+        _, rp, raccel = drive2(r_step, r_init, p2)
+        mesh_tp = make_host_mesh(model=2)
+        h_init, h_step = make_hybrid_step(loss2, rule, icfg, mesh_tp,
+                                          lr_fn=lr_fn, donate=False)
+        p2s = jax.device_put(p2, {"w": NamedSharding(mesh_tp,
+                                                     P(None, "model"))})
+        _, hp, haccel = drive2(h_step, h_init, p2s)
+        dev = float(np.max(np.abs(np.asarray(rp["w"]) - np.asarray(hp["w"]))))
+        legs["sharded-tp(model=2)"] = {
+            "ok": dev <= tol and raccel == haccel and raccel > 0,
+            "max_param": dev}
+
+    ok = all(leg["ok"] for leg in legs.values())
+    if verbose:
+        for name, leg in legs.items():
+            print(f"  {name:22s} ok={leg['ok']} max_param={leg['max_param']}")
+    return {"ok": ok, "devices": n_dev, "steps": steps, "K": K,
+            "accelerations": int(ref[2]["accelerated"].sum()), "legs": legs}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "(0 = use whatever XLA_FLAGS already provides)")
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--chunk-steps", type=int, default=4)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.devices:
+        _force_host_devices(args.devices)
+    r = run_hybrid_parity(steps=args.steps, K=args.chunk_steps, tol=args.tol,
+                          verbose=args.verbose)
+    bad = [n for n, leg in r["legs"].items() if not leg["ok"]]
+    print(f"hybrid-parity devices={r['devices']} steps={r['steps']} "
+          f"K={r['K']} accelerations={r['accelerations']} "
+          f"legs={len(r['legs'])} failed={bad or 'none'} -> "
+          f"{'OK' if r['ok'] else 'FAIL'}")
+    if r["accelerations"] == 0:
+        print("hybrid-parity WARNING: subproblem never fired")
+        return 2
+    return 0 if r["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,11 +27,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
-    """Debug mesh over however many (CPU) devices exist."""
-    n = len(jax.devices())
-    data = n // model
-    return _make_mesh((data, model), ("data", "model"))
+def make_host_mesh(model: int = 1, devices=None):
+    """2-D ``(data, model)`` mesh over however many (CPU) devices exist —
+    the hybrid DP × TP engine's debug mesh.  ``model`` of the devices go to
+    the tensor-parallel axis; the rest form the data axis.  An explicit
+    ``devices`` list pins a sub-mesh (parity tests use it to build a
+    ``(1, 1)`` mesh on a multi-device process)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs)
+    if model < 1 or n % model:
+        raise SystemExit(
+            f"model-parallel degree must divide the device count: "
+            f"n={n} devices, M={model} (choose M from the divisors of {n})")
+    return _make_mesh((n // model, model), ("data", "model"), devices=devs)
 
 
 def make_data_mesh(devices=None):

@@ -3,6 +3,16 @@ optimizer state, input batches, and serving caches.
 
 All picks go through rules.pick_spec so non-divisible dims silently fall
 back to the next candidate (DESIGN.md §5).
+
+The hybrid DP × TP engine (repro.distributed.data_parallel) places params
+through ``hybrid_params_placement`` below: model-axis tensor parallelism
+(with FSDP over 'data' by default, as the old pjit runner had) on meshes
+with a live tensor axis — the GSPMD strategy is layout-agnostic, GSPMD
+gathers what it needs — and replicated on pure-data meshes, where the
+manual shard_map strategy *requires* data-axis replication.  It pairs with
+``state_shardings``, which mirrors each velocity leaf onto its parameter's
+sharding and keeps the ψ queue/counters replicated so the control
+statistics stay identical on every device.
 """
 from __future__ import annotations
 
@@ -123,3 +133,23 @@ def state_shardings(mesh: Mesh, state_shapes, params_shardings):
 
 def params_shardings(mesh: Mesh, params_shapes, *, fsdp: bool = True):
     return rules.params_shardings(mesh, params_shapes, fsdp=fsdp)
+
+
+def hybrid_params_placement(mesh: Mesh, params, *, fsdp: bool = True):
+    """device_put ``params`` for the hybrid engine on ``mesh``; returns
+    ``(params, shardings)`` (feed the shardings to ``state_shardings``).
+
+    Tensor/FSDP-sharded per ``params_shardings`` when the mesh has a live
+    tensor axis (the engine's GSPMD strategy), replicated otherwise (the
+    manual shard_map strategy requires data-axis replication).  The single
+    source of truth for the launcher, examples, and benchmarks — keep them
+    from drifting apart.
+    """
+    from repro.distributed.data_parallel import tensor_axes
+    if tensor_axes(mesh):
+        sh = params_shardings(mesh, jax.eval_shape(lambda: params),
+                              fsdp=fsdp)
+    else:
+        rep = _ns(mesh, P())
+        sh = jax.tree.map(lambda _: rep, params)
+    return jax.device_put(params, sh), sh

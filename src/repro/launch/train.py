@@ -2,18 +2,28 @@
 
 On real TPU hardware this runs the ISGD train loop under the production
 mesh; on this CPU container it runs reduced configs under a host mesh so the
-whole path (sharded params, pjit'd ISGD step with its cond/while_loop,
+whole path (sharded params, sharded ISGD step with its cond/while_loop,
 loss-driven LR) is exercised end-to-end.
 
-Three engines (``--engine``; ``--data-parallel`` remains as an alias):
+Every synchronous engine builds its step through ONE path —
+``train.trainer.make_step_core`` wrapped by the hybrid shard_map engine in
+``repro.distributed.data_parallel`` — so the loss-driven LR (ψ̄ read with
+its one-step lag, Alg.1 line 19) is identical everywhere.  (Historical
+note: the old pjit runner hand-rolled its own step closure and froze the
+schedule at ``lr_fn(0.0)``; that closure is gone and tests/test_hybrid.py
+pins the fix.)  Engines (``--engine``; ``--data-parallel`` remains as an
+alias):
 
-  * ``pjit`` (default) — pjit/GSPMD over a (data, model) mesh: tensor/FSDP
-    parallel weights, activation-sharding constraints (launch/shardings.py);
-  * ``data-parallel`` — the shard_map engine (repro.distributed): params
-    and ISGD state replicated, batch sharded over 'data', gradients and the
-    control statistic ψ explicitly all-reduced so every device takes the
-    same accelerate branch (paper §6); input batches ride the
-    double-buffered host->device prefetcher;
+  * ``hybrid`` (default; ``pjit`` is an alias) — the DP × TP engine on a
+    2-D ``(data, model)`` host mesh: batch sharded over 'data' with
+    grads/ψ globally reduced there, params/velocity sharded over 'model'
+    (launch/shardings.py, ``--model-parallel M``) with activation
+    constraints.  With ``M=1`` the engine runs the manual shard_map
+    strategy (explicit AxisReduce pmeans — identical to data-parallel);
+    with ``M>1`` the same step body runs as one GSPMD program
+    (pjit-with-constraints) — see repro.distributed.data_parallel for why;
+  * ``data-parallel`` — the same engine on a 1-D ('data',) mesh: params
+    and ISGD state replicated, batch sharded over 'data' (paper §6);
   * ``async-ps`` — the asynchronous parameter-server engine (paper §6.2,
     repro.distributed.async_ps): ``--workers`` threads over per-worker FCPR
     shards push staleness-weighted deltas (``--staleness-decay``, w(τ)) to
@@ -21,8 +31,8 @@ Three engines (``--engine``; ``--data-parallel`` remains as an alias):
     consistent statistics; ``--max-staleness`` bounds how far workers may
     drift apart (0 = lockstep rounds — the synchronous schedule).
 
-Two input/dispatch accelerators compose with the pjit and data-parallel
-engines (async-ps is host-orchestrated per worker step and rejects them):
+Two input/dispatch accelerators compose with the synchronous engines
+(async-ps is host-orchestrated per worker step and rejects them):
 
   * ``--device-ring`` — serve batches from the device-resident FCPR ring
     (one epoch upload, batches by dynamic_slice) instead of per-step host
@@ -36,11 +46,13 @@ engines (async-ps is host-orchestrated per worker step and rejects them):
       --reduced --steps 30 --batch 8 --seq 128
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.train --arch internlm2-1.8b --reduced \
-      --data-parallel --chunk-steps 8 --steps 32 --batch 16
+      --engine hybrid --model-parallel 2 --chunk-steps 8 --steps 32 \
+      --batch 16
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -49,19 +61,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import ISGDConfig, consistent_step, isgd_init, isgd_step
+from repro.core import ISGDConfig
 from repro.core.schedule import constant_lr
 from repro.data import DeviceRing, FCPRSampler, make_lm_tokens, ring_or_prefetch
 from repro.distributed import (PrefetchSampler, batch_sharding,
-                               make_chunked_data_parallel_step,
-                               make_data_parallel_step, replicated)
+                               make_chunked_hybrid_step, make_hybrid_step,
+                               tensor_axes)
 from repro.launch import shardings as SH
 from repro.launch.mesh import make_data_mesh, make_host_mesh
 from repro.models import build_model
 from repro.optim import RULES
 from repro.sharding import activation_sharding, rules
-from repro.train.chunked import chunk_over_ring
-from repro.train.trainer import make_loss_and_grad
 
 
 def frontend_embeds(cfg, batch_size: int):
@@ -100,58 +110,89 @@ def _drive_chunks(jchunk, state, params, ring, steps: int, k: int):
     return state, n_chunks * k
 
 
-def run_data_parallel(args, cfg, model, sampler, rule, icfg, lr_fn):
-    mesh = make_data_mesh()
-    n_dev = mesh.shape["data"]
-    if args.batch % n_dev:
+def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
+             engine: str = "hybrid"):
+    """The synchronous engines — ``hybrid`` (DP × TP, 2-D mesh) and
+    ``data-parallel`` (1-D mesh) — one driving loop, one step path
+    (``make_step_core`` under the hybrid shard_map engine).  Returns
+    ``(state, wall_seconds, steps_run)``."""
+    if engine == "data-parallel":
+        if args.model_parallel != 1:
+            raise SystemExit("--model-parallel composes with --engine "
+                             "hybrid, not --engine data-parallel")
+        mesh = make_data_mesh()
+    else:
+        mesh = make_host_mesh(model=args.model_parallel)
+    n_data = mesh.shape["data"]
+    if args.batch % n_data:
         raise SystemExit(f"--batch {args.batch} must be a multiple of the "
-                         f"{n_dev} devices (it is split across them)")
-    print(f"arch={cfg.name} engine=data-parallel devices={n_dev} "
-          f"per_device_batch={args.batch // n_dev} "
+                         f"{n_data} 'data'-axis devices (it is split across "
+                         f"them)")
+    print(f"arch={cfg.name} engine={engine} mesh={dict(mesh.shape)} "
+          f"per_device_batch={args.batch // n_data} "
           f"chunk_steps={args.chunk_steps}")
 
-    params = jax.device_put(model.init(jax.random.PRNGKey(0),
-                                       max_seq=args.seq), replicated(mesh))
+    params = model.init(jax.random.PRNGKey(0), max_seq=args.seq)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"params: {n_params/1e6:.1f}M (replicated)")
+    tp = bool(tensor_axes(mesh))
+    params, p_sh = SH.hybrid_params_placement(mesh, params)
+    if tp:
+        # GSPMD strategy: tensor/FSDP-parallel weights + the activation
+        # constraint table (valid here — the step is one global program)
+        table = rules.activation_rule_table(mesh, args.batch)
+        ctx = activation_sharding(rules.make_constrain(mesh, table))
+        print(f"params: {n_params/1e6:.1f}M (model/FSDP-sharded)")
+    else:
+        # manual shard_map strategy: params replicated; constraints would
+        # be illegal inside the manual region and are not needed
+        ctx = contextlib.nullcontext()
+        print(f"params: {n_params/1e6:.1f}M (replicated)")
 
     if args.chunk_steps > 1:
-        # fused engine: sharded device ring + K steps per dispatch
-        ring = DeviceRing(ring_epoch(cfg, sampler, args.batch), args.batch,
-                          mesh=mesh)
-        init_fn, jchunk = make_chunked_data_parallel_step(
+        init_fn, jstep = make_chunked_hybrid_step(
             model.loss_fn, rule, icfg, mesh, chunk_steps=args.chunk_steps,
             inconsistent=not args.consistent, lr_fn=lr_fn)
-        state = init_fn(params)
-        t0 = time.perf_counter()
-        state, args.steps = _drive_chunks(jchunk, state, params, ring,
-                                          args.steps, args.chunk_steps)
-        return state, time.perf_counter() - t0
-
-    init_fn, jstep = make_data_parallel_step(
-        model.loss_fn, rule, icfg, mesh,
-        inconsistent=not args.consistent, lr_fn=lr_fn)
-    state = init_fn(params)
-
-    b_sh = batch_sharding(mesh)
-    extra = {k: jax.device_put(v, b_sh)
-             for k, v in frontend_embeds(cfg, args.batch).items()}
-    if args.device_ring:
-        feed = ring_or_prefetch(sampler, mesh=mesh)   # ring if it fits
-        print(f"input: {type(feed).__name__}")
     else:
-        feed = PrefetchSampler(
-            sampler, sharding=SH.data_parallel_shardings(mesh, sampler(0)))
-    t0 = time.perf_counter()
-    for j in range(args.steps):
-        batch = dict(feed(j), **extra)
-        state, params, m = jstep(state, params, batch)
-        if (j + 1) % 5 == 0 or j == 0:
-            print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
-                  f"psi_bar={float(m['psi_bar']):.4f} "
-                  f"limit={float(m['limit']):.4f} "
-                  f"accel={bool(m['accelerated'])}")
-    return state, time.perf_counter() - t0
+        init_fn, jstep = make_hybrid_step(
+            model.loss_fn, rule, icfg, mesh,
+            inconsistent=not args.consistent, lr_fn=lr_fn)
+    state = init_fn(params)
+    s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
+
+    with mesh, ctx:
+        state = jax.device_put(state, s_sh)
+        if args.chunk_steps > 1:
+            # fused engine: sharded device ring + K steps per dispatch
+            # (manual strategy slices its relaid-out local block; GSPMD
+            # strategy slices the global row order)
+            ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
+                              args.batch, mesh=mesh, relayout=not tp)
+            t0 = time.perf_counter()
+            state, steps = _drive_chunks(jstep, state, params, ring,
+                                         args.steps, args.chunk_steps)
+            return state, time.perf_counter() - t0, steps
+
+        b_sh = batch_sharding(mesh)
+        extra = {k: jax.device_put(v, b_sh)
+                 for k, v in frontend_embeds(cfg, args.batch).items()}
+        if args.device_ring:
+            feed = ring_or_prefetch(sampler, mesh=mesh,  # ring if it fits
+                                    relayout=not tp)
+            print(f"input: {type(feed).__name__}")
+        else:
+            feed = PrefetchSampler(
+                sampler,
+                sharding=SH.data_parallel_shardings(mesh, sampler(0)))
+        t0 = time.perf_counter()
+        for j in range(args.steps):
+            batch = dict(feed(j), **extra)
+            state, params, m = jstep(state, params, batch)
+            if (j + 1) % 5 == 0 or j == 0:
+                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                      f"psi_bar={float(m['psi_bar']):.4f} "
+                      f"limit={float(m['limit']):.4f} "
+                      f"accel={bool(m['accelerated'])}")
+        return state, time.perf_counter() - t0, args.steps
 
 
 def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
@@ -184,7 +225,6 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
     t0 = time.perf_counter()
     params, state, records = coord.run(params, sampler, args.steps)
     dt = time.perf_counter() - t0
-    args.steps = len(records)
     for i, r in enumerate(records):
         if (i + 1) % 5 == 0 or i == 0:
             print(f"push {i+1:4d} w{r['worker']} tau={r['tau']} "
@@ -194,58 +234,7 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
     print(f"staleness: mean_tau={sum(taus)/len(taus):.2f} "
           f"max_tau={max(taus)} "
           f"bound={(2 * args.max_staleness + 1) * (args.workers - 1)}")
-    return state, dt
-
-
-def run_pjit(args, cfg, model, sampler, rule, icfg, lr_fn):
-    mesh = make_host_mesh(model=args.model_parallel)
-    print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={mesh.size}")
-
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, max_seq=args.seq)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"params: {n_params/1e6:.1f}M")
-
-    lg = make_loss_and_grad(model.loss_fn)
-
-    def step(state, params, batch):
-        if args.consistent:
-            return consistent_step(rule, lg, state, params, batch, lr_fn(0.0))
-        return isgd_step(rule, icfg, lg, state, params, batch, lr_fn(0.0))
-
-    p_sh = SH.params_shardings(mesh, jax.eval_shape(lambda: params))
-    state = isgd_init(rule, icfg, params)
-    s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
-    table = rules.activation_rule_table(mesh, args.batch)
-    extra = frontend_embeds(cfg, args.batch)
-    with mesh, activation_sharding(rules.make_constrain(mesh, table)):
-        params = jax.device_put(params, p_sh)
-        state = jax.device_put(state, s_sh)
-        t0 = time.perf_counter()
-        if args.chunk_steps > 1:
-            # fused engine under pjit: scan over the (unsharded) ring; GSPMD
-            # re-lays-out the sliced batch per the activation constraints
-            ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
-                              args.batch)
-            jchunk = jax.jit(
-                chunk_over_ring(step, icfg.n_batches, args.chunk_steps),
-                donate_argnums=(0, 1))
-            state, args.steps = _drive_chunks(jchunk, state, params, ring,
-                                              args.steps, args.chunk_steps)
-            return state, time.perf_counter() - t0
-        jstep = jax.jit(step, donate_argnums=(0, 1))
-        feed = ring_or_prefetch(sampler) if args.device_ring else \
-            (lambda j: {k: jnp.asarray(v) for k, v in sampler(j).items()})
-        for j in range(args.steps):
-            batch = dict(feed(j), **extra)
-            state, params, m = jstep(state, params, batch)
-            if (j + 1) % 5 == 0 or j == 0:
-                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
-                      f"psi_bar={float(m['psi_bar']):.4f} "
-                      f"limit={float(m['limit']):.4f} "
-                      f"accel={bool(m['accelerated'])}")
-        dt = time.perf_counter() - t0
-    return state, dt
+    return state, dt, len(records)
 
 
 def main():
@@ -262,11 +251,14 @@ def main():
     ap.add_argument("--k-sigma", type=float, default=2.0)
     ap.add_argument("--stop", type=int, default=3)
     ap.add_argument("--n-seqs", type=int, default=64)
-    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="hybrid engine: devices on the tensor-parallel "
+                         "'model' axis (must divide the device count; the "
+                         "rest form the 'data' axis)")
     ap.add_argument("--engine", default=None,
-                    choices=["pjit", "data-parallel", "async-ps"],
-                    help="training engine (default pjit; see module "
-                         "docstring)")
+                    choices=["hybrid", "pjit", "data-parallel", "async-ps"],
+                    help="training engine (default hybrid; 'pjit' is an "
+                         "alias for it — see module docstring)")
     ap.add_argument("--data-parallel", action="store_true",
                     help="alias for --engine data-parallel")
     ap.add_argument("--workers", type=int, default=2,
@@ -301,12 +293,18 @@ def main():
                       stop=args.stop)
     lr_fn = constant_lr(args.lr)
 
-    engine = args.engine or ("data-parallel" if args.data_parallel else "pjit")
-    runner = {"pjit": run_pjit, "data-parallel": run_data_parallel,
-              "async-ps": run_async_ps}[engine]
-    state, dt = runner(args, cfg, model, sampler, rule, icfg, lr_fn)
-    print(f"done: {args.steps} steps in {dt:.1f}s "
-          f"({dt/args.steps*1e3:.0f} ms/step) "
+    engine = args.engine or ("data-parallel" if args.data_parallel
+                             else "hybrid")
+    if engine == "pjit":
+        engine = "hybrid"                 # historical alias, same engine
+    if engine == "async-ps":
+        state, dt, steps = run_async_ps(args, cfg, model, sampler, rule,
+                                        icfg, lr_fn)
+    else:
+        state, dt, steps = run_sync(args, cfg, model, sampler, rule, icfg,
+                                    lr_fn, engine=engine)
+    print(f"done: {steps} steps in {dt:.1f}s "
+          f"({dt/steps*1e3:.0f} ms/step) "
           f"accelerated={int(state.accel_count)} "
           f"sub_iters={int(state.sub_iters)}")
 

@@ -1,0 +1,237 @@
+"""Hybrid DP × TP engine (ISSUE 4).
+
+Acceptance invariants:
+
+  * **ψ̄-regression (the headline bugfix)** — the old pjit runner evaluated
+    ``lr_fn(0.0)`` instead of ``lr_fn(ψ̄)``, silently freezing the paper's
+    loss-driven schedule (Alg.1 line 19) on the tensor-parallel path.  A
+    ψ̄-dependent ``lr_fn`` driven through the hybrid engine must reproduce
+    ``make_train_step`` bit-exactly over ≥ 2 FCPR epochs — and must differ
+    from a deliberately frozen ``lr_fn(0.0)`` run, proving the comparison
+    can catch the bug;
+  * **engine unification** — the hybrid engine at ``model=1`` is the pure
+    data-parallel engine (bit-exact, same shard_map program), and its GSPMD
+    strategy at ``data=1`` is the reference program;
+  * **mesh hygiene** — ``make_host_mesh`` rejects non-divisible
+    model-parallel degrees with a clear ``SystemExit`` instead of an opaque
+    ``jax.make_mesh`` error.
+
+The full matrix (including the forced-8-device legs CI pins) lives in
+``repro.distributed.hybrid_parity``; the subprocess test below runs it.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ISGDConfig
+from repro.data import DeviceRing, FCPRSampler
+from repro.distributed import (make_chunked_hybrid_step, make_hybrid_step,
+                               run_hybrid_parity, tensor_axes)
+from repro.launch.mesh import make_data_mesh, make_host_mesh
+from repro.optim import momentum
+from repro.train import make_train_step
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+STEPS = 32                      # n_batches=4 -> 8 FCPR epochs
+
+
+def _problem(batch_size, n_batches=4, dim=6, seed=0):
+    rng = np.random.RandomState(seed)
+    xs = rng.randn(batch_size * n_batches, dim).astype(np.float32)
+    ys = ((xs @ rng.randn(dim, 1).astype(np.float32)).ravel()
+          / np.sqrt(dim)).astype(np.float32)
+    ys[:batch_size] += 3.0      # outlier batch: the subproblem must fire
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params = {"w": jnp.zeros((dim,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch_size, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.0, stop=3,
+                      zeta=0.01)
+    return loss_fn, params, sampler, icfg
+
+
+def _lr_fn(psi_bar):
+    # ψ̄-dependent on purpose: regresses the pjit lr_fn(0.0) freeze
+    return jnp.asarray(0.01) + 0.001 * jnp.minimum(psi_bar, 1.0)
+
+
+def _run(step_fn, init_fn, params0, feed, steps=STEPS):
+    p = jax.tree.map(jnp.copy, params0)
+    s = init_fn(p)
+    ms = []
+    for j in range(steps):
+        s, p, m = step_fn(s, p, feed(j))
+        ms.append(jax.tree.map(np.asarray, m))
+    stacked = {k: np.stack([m[k] for m in ms]) for k in ms[0]}
+    return s, p, stacked
+
+
+def _assert_bit_exact(ref, got, ref_p, got_p):
+    for key in ("loss", "limit", "psi_bar", "accelerated", "sub_iters"):
+        np.testing.assert_array_equal(ref[key], got[key], err_msg=key)
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(got_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref["accelerated"].sum() > 0, "subproblem never fired"
+
+
+# ---------------------------------------------------------------------------
+# the headline regression: ψ̄-driven LR through the hybrid engine
+# ---------------------------------------------------------------------------
+def test_hybrid_psi_lr_bit_exact_vs_per_step_and_catches_freeze():
+    """hybrid(1,1) ≡ make_train_step under a ψ̄-dependent lr_fn, and a
+    lr_fn(0.0)-frozen run differs — the exact bug the old run_pjit had."""
+    loss_fn, params0, sampler, icfg = _problem(batch_size=8)
+    rule = momentum(0.9)
+    feed = lambda j: {k: jnp.asarray(v)            # noqa: E731
+                      for k, v in sampler(j).items()}
+
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=_lr_fn,
+                                    donate=False)
+    ref_s, ref_p, ref = _run(step, init_fn, params0, feed)
+
+    mesh = make_host_mesh(model=1, devices=[jax.devices()[0]])
+    assert tensor_axes(mesh) == ()
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh, lr_fn=_lr_fn,
+                                    donate=False)
+    got_s, got_p, got = _run(hstep, hinit, params0, feed)
+    _assert_bit_exact(ref, got, ref_p, got_p)
+    assert int(ref_s.accel_count) == int(got_s.accel_count)
+
+    # the trap the matrix must catch: a frozen schedule diverges
+    finit, fstep = make_hybrid_step(loss_fn, rule, icfg, mesh,
+                                    lr_fn=lambda _: _lr_fn(0.0),
+                                    donate=False)
+    _, froz_p, _ = _run(fstep, finit, params0, feed)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(froz_p)))
+
+
+def test_hybrid_model1_bit_exact_vs_data_parallel():
+    """The unification claim: hybrid on (data=n, model=1) IS the pure
+    data-parallel engine (same manual shard_map program)."""
+    n_dev = len(jax.devices())
+    loss_fn, params0, sampler, icfg = _problem(batch_size=8 * n_dev)
+    rule = momentum(0.9)
+    feed = lambda j: {k: jnp.asarray(v)            # noqa: E731
+                      for k, v in sampler(j).items()}
+
+    dinit, dstep = make_hybrid_step(loss_fn, rule, icfg, make_data_mesh(),
+                                    lr_fn=_lr_fn, donate=False)
+    ref_s, ref_p, ref = _run(dstep, dinit, params0, feed)
+
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg,
+                                    make_host_mesh(model=1),
+                                    lr_fn=_lr_fn, donate=False)
+    got_s, got_p, got = _run(hstep, hinit, params0, feed)
+    _assert_bit_exact(ref, got, ref_p, got_p)
+
+
+def test_hybrid_pure_tp_gspmd_bit_exact_vs_per_step():
+    """hybrid on (data=1, model=n): the GSPMD strategy.  With the tiny
+    test params replicated the global program is the reference program."""
+    n_dev = len(jax.devices())
+    loss_fn, params0, sampler, icfg = _problem(batch_size=8)
+    rule = momentum(0.9)
+    feed = lambda j: {k: jnp.asarray(v)            # noqa: E731
+                      for k, v in sampler(j).items()}
+
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=_lr_fn,
+                                    donate=False)
+    _, ref_p, ref = _run(step, init_fn, params0, feed)
+
+    mesh = make_host_mesh(model=n_dev)
+    assert tensor_axes(mesh) == (() if n_dev == 1 else ("model",))
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh, lr_fn=_lr_fn,
+                                    donate=False)
+    _, got_p, got = _run(hstep, hinit, params0, feed)
+    _assert_bit_exact(ref, got, ref_p, got_p)
+
+
+def test_chunked_hybrid_bit_exact_vs_per_step_hybrid():
+    """The fused K=4 leg on the hybrid mesh (manual strategy): scan over
+    the data-sub-axis-sharded ring ≡ the per-step hybrid engine."""
+    n_dev = len(jax.devices())
+    loss_fn, params0, sampler, icfg = _problem(batch_size=8 * n_dev)
+    rule = momentum(0.9)
+    mesh = make_host_mesh(model=1)
+    ring = DeviceRing(sampler.epoch_arrays(), sampler.batch_size, mesh=mesh)
+
+    hinit, hstep = make_hybrid_step(loss_fn, rule, icfg, mesh, lr_fn=_lr_fn,
+                                    donate=False)
+    _, ref_p, ref = _run(hstep, hinit, params0, ring)
+
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh,
+                                            chunk_steps=4, lr_fn=_lr_fn,
+                                            donate=False)
+    p = jax.tree.map(jnp.copy, params0)
+    s = cinit(p)
+    outs = []
+    for c in range(STEPS // 4):
+        s, p, ms = chunk(s, p, ring.arrays, c * 4)
+        outs.append(jax.tree.map(np.asarray, ms))
+    got = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    _assert_bit_exact(ref, got, ref_p, p)
+
+
+# ---------------------------------------------------------------------------
+# mesh hygiene + ring on a 2-D mesh
+# ---------------------------------------------------------------------------
+def test_make_host_mesh_rejects_non_divisible_model_parallel():
+    n = len(jax.devices())
+    with pytest.raises(SystemExit, match=f"n={n} devices, M={2 * n}"):
+        make_host_mesh(model=2 * n)
+    with pytest.raises(SystemExit, match="M=0"):
+        make_host_mesh(model=0)
+    mesh = make_host_mesh(model=n)          # every divisor is fine
+    assert dict(mesh.shape) == {"data": 1, "model": n}
+
+
+def test_device_ring_on_2d_mesh_serves_global_batches():
+    """Both ring layouts on the hybrid (data, model) mesh reproduce the
+    host sampler: the relayout keys on the data sub-axis only."""
+    mesh = make_host_mesh(model=1)
+    n_data = mesh.shape["data"]
+    _, _, sampler, _ = _problem(batch_size=4 * n_data, n_batches=3)
+    for relayout in (True, False):
+        ring = DeviceRing(sampler.epoch_arrays(), sampler.batch_size,
+                          mesh=mesh, relayout=relayout)
+        assert ring.n_devices == n_data
+        for j in range(7):                  # wraps the cycle twice
+            got, want = ring(j), sampler(j)
+            for k in want:
+                np.testing.assert_array_equal(np.asarray(got[k]), want[k])
+
+
+# ---------------------------------------------------------------------------
+# the full matrix: in-process + forced 8 devices
+# ---------------------------------------------------------------------------
+def test_hybrid_parity_inprocess():
+    r = run_hybrid_parity(steps=STEPS, K=4)
+    assert r["ok"], r
+    assert r["accelerations"] > 0
+
+
+def test_hybrid_parity_subprocess_8_devices():
+    """The acceptance-criteria check: the whole parity matrix under 8
+    forced host devices — (8,1) vs data-parallel, (1,8) GSPMD, chunked
+    K=4, the genuinely model-sharded leg — in a fresh interpreter."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)   # parity sets the device-count flag itself
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.hybrid_parity",
+         "--devices", "8", "--steps", "32"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "devices=8" in proc.stdout
