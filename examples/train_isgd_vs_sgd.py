@@ -34,10 +34,18 @@ globally consistent statistics; ``--max-staleness`` bounds worker drift
 (0 = lockstep; with 1 worker, bit-exact with the per-step engine) and
 ``--staleness-decay`` picks w(τ).
 
+``--schedule fcpr|loss-prop|rank`` (ISSUE 5, ``repro.sched``) swaps the
+fixed FCPR cycle for a batch-*selection* policy on both legs: selection
+runs inside the jitted step over the device ring (``fcpr`` is bit-exact
+with the default path; ``loss-prop`` demos loss-aware selection — compare
+its visit counts and ψ̄ trace against a plain run).  Composes with
+``--chunk-steps``/``--devices``/``--model-parallel``, not ``--async-ps``.
+
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --steps 200
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --params 100 --steps 300
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --devices 8 --batch 16
   PYTHONPATH=src python examples/train_isgd_vs_sgd.py --chunk-steps 20
+  PYTHONPATH=src python examples/train_isgd_vs_sgd.py --schedule loss-prop
 """
 from __future__ import annotations
 
@@ -127,6 +135,10 @@ def main():
                     help="async-ps: SSP staleness bound (0 = lockstep)")
     ap.add_argument("--staleness-decay", default="inverse",
                     help="async-ps: w(tau) family[:alpha]")
+    ap.add_argument("--schedule", default=None,
+                    help="batch-selection policy (repro.sched): fcpr | "
+                         "loss-prop | rank (family:k=v,... for options); "
+                         "selection runs on device over the ring")
     ap.add_argument("--ckpt", default="experiments/e2e_lm.npz")
     args = ap.parse_args()
 
@@ -161,11 +173,22 @@ def main():
         from repro.launch import shardings as SH
         params0, _ = SH.hybrid_params_placement(mesh, params0)
 
+    schedule = None
+    if args.schedule is not None:
+        if args.async_ps:
+            raise SystemExit("--schedule does not compose with --async-ps "
+                             "(workers own fixed FCPR stripes)")
+        from repro.sched import schedule_from_spec
+        schedule = schedule_from_spec(args.schedule)
+        print(f"schedule: {schedule}")
+
     K = args.chunk_steps
     ring = None
     if K > 1:
         args.steps = -(-args.steps // K) * K         # whole chunks
-        # one epoch upload serves both legs (identical permuted data)
+    if K > 1 or schedule is not None:
+        # one epoch upload serves both legs (identical permuted data);
+        # scheduled engines select on device, so the ring is mandatory
         ring = DeviceRing(sampler.epoch_arrays(), args.batch, mesh=mesh,
                           relayout=not tp)
     results = {}
@@ -194,6 +217,57 @@ def main():
                   f"max_staleness={args.max_staleness} "
                   f"mean_tau={sum(taus)/len(taus):.2f} max_tau={max(taus)} "
                   f"final loss={log.losses[-1]:.4f}")
+        elif schedule is not None:
+            # scheduled engines (repro.sched): selection inside the jit
+            if K > 1:
+                if mesh is not None:
+                    init_fn, sfn = make_chunked_hybrid_step(
+                        model.loss_fn, momentum(0.9), icfg, mesh,
+                        chunk_steps=K, inconsistent=inconsistent,
+                        lr_fn=lr_fn, schedule=schedule)
+                else:
+                    init_fn, sfn = make_chunked_train_step(
+                        model.loss_fn, momentum(0.9), icfg, chunk_steps=K,
+                        inconsistent=inconsistent, lr_fn=lr_fn,
+                        schedule=schedule)
+            elif mesh is not None:
+                init_fn, sfn = make_hybrid_step(
+                    model.loss_fn, momentum(0.9), icfg, mesh,
+                    inconsistent=inconsistent, lr_fn=lr_fn,
+                    schedule=schedule)
+            else:
+                from repro.train import make_scheduled_train_step
+                init_fn, sfn = make_scheduled_train_step(
+                    model.loss_fn, momentum(0.9), icfg, schedule,
+                    inconsistent=inconsistent, lr_fn=lr_fn)
+            state = init_fn(params)
+            sched_state = schedule.init(icfg.n_batches)
+            visits = np.zeros(icfg.n_batches, np.int64)
+            t0 = time.perf_counter()
+            if K > 1:
+                for c in range(args.steps // K):
+                    state, params, sched_state, ms = sfn(
+                        state, params, sched_state, ring.arrays, c * K)
+                    log.extend(ms, time.perf_counter() - t0)
+                    visits += np.bincount(np.asarray(ms["batch_idx"]),
+                                          minlength=icfg.n_batches)
+                    print(f"[{name}] step {(c+1)*K:4d} "
+                          f"loss={log.losses[-1]:.4f} "
+                          f"ψ̄={log.psi_bar[-1]:.4f} "
+                          f"accel={log.accelerated[-1]}")
+            else:
+                for j in range(args.steps):
+                    state, params, sched_state, m = sfn(
+                        state, params, sched_state, ring.arrays, j)
+                    log.append(jax.tree.map(np.asarray, m),
+                               time.perf_counter() - t0)
+                    visits[int(m["batch_idx"])] += 1
+                    if (j + 1) % 20 == 0:
+                        print(f"[{name}] step {j+1:4d} "
+                              f"loss={log.losses[-1]:.4f} "
+                              f"ψ̄={log.psi_bar[-1]:.4f} "
+                              f"accel={log.accelerated[-1]}")
+            print(f"[{name}] schedule visits per batch: {visits.tolist()}")
         elif K > 1:
             # fused engine: K steps per dispatch, metrics fetched per chunk
             if mesh is not None:

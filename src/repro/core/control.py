@@ -51,6 +51,38 @@ def push(q: LossQueue, loss) -> LossQueue:
     )
 
 
+def push_at(q: LossQueue, slot, loss) -> LossQueue:
+    """O(1) per-batch *table* write: replace the loss at position ``slot``
+    (= the batch index) instead of dequeuing FIFO.
+
+    Used by non-FCPR batch schedules (``repro.sched``): when the visit
+    order is no longer the fixed cycle, the FIFO window stops meaning "one
+    epoch" (hot batches would occupy several entries), so the queue is
+    re-purposed as a per-batch loss table — one slot per batch — and
+    ψ̄/σ/limit become statistics over the latest loss of each batch.
+
+    Validity bookkeeping reuses ``count``: ``mean``/``std`` mask to slots
+    ``< count``, so callers must fill slots ``0..n_b-1`` in order before
+    free-order writes — which the schedules' warm-up FCPR sweep does (and
+    the +inf warm-up limit holds until all ``n_b`` slots are seen, exactly
+    as under FIFO pushes).
+    """
+    loss = jnp.asarray(loss, jnp.float32)
+    slot = jnp.asarray(slot, jnp.int32)
+    n_b = q.buf.shape[0]
+    old = q.buf[slot]
+    filled = slot < q.count
+    total = q.total + loss - jnp.where(filled, old, 0.0)
+    total_sq = q.total_sq + loss * loss - jnp.where(filled, old * old, 0.0)
+    return LossQueue(
+        buf=q.buf.at[slot].set(loss),
+        total=total,
+        total_sq=total_sq,
+        count=jnp.minimum(jnp.maximum(q.count, slot + 1), n_b),
+        idx=(slot + 1) % n_b,
+    )
+
+
 def mean(q: LossQueue):
     return q.total / jnp.maximum(q.count, 1).astype(jnp.float32)
 

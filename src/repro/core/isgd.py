@@ -110,12 +110,18 @@ def isgd_init(rule: UpdateRule, cfg: ISGDConfig, params) -> ISGDState:
 
 def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
               state: ISGDState, params, batch, lr,
-              reduce_ctx: ReduceCtx = LOCAL):
+              reduce_ctx: ReduceCtx = LOCAL, slot=None):
     """One inconsistent-training iteration (Alg.1 body).
 
     ``loss_and_grad(params, batch) -> ((loss, aux), grads)`` computes the
     per-shard loss/gradients; ``reduce_ctx`` turns them into the globally
     reduced ψ/grads the controller monitors (identity for single device).
+
+    ``slot`` (static ``None`` or a traced batch index) picks the SPC queue
+    write: ``None`` = FIFO push (FCPR: window = one epoch); an index =
+    per-batch table write (``control.push_at``), used by non-FCPR batch
+    schedules so the limit statistics stay one-entry-per-batch
+    (``repro.sched``).
     """
     loss_and_grad = reduce_ctx.wrap_loss_and_grad(loss_and_grad)
     (loss, aux), grads = loss_and_grad(params, batch)
@@ -124,7 +130,8 @@ def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
     base_state, params = rule.apply(state.base, params, grads, lr)
 
     # lines 13-20: queue + control limit
-    queue = control.push(state.queue, loss)
+    queue = (control.push(state.queue, loss) if slot is None
+             else control.push_at(state.queue, slot, loss))
     limit = control.control_limit(queue, cfg.k_sigma)
     accelerate = (loss > limit)          # warm-up handled by limit=+inf
 
@@ -160,13 +167,15 @@ def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
 
 
 def consistent_step(rule: UpdateRule, loss_and_grad: Callable, state, params,
-                    batch, lr, reduce_ctx: ReduceCtx = LOCAL):
+                    batch, lr, reduce_ctx: ReduceCtx = LOCAL, slot=None):
     """Baseline SGD/Momentum/Nesterov step (no inconsistent training) with the
-    same metrics surface, so benchmarks are single-factor (paper §5.2)."""
+    same metrics surface, so benchmarks are single-factor (paper §5.2).
+    ``slot`` as in :func:`isgd_step`."""
     loss_and_grad = reduce_ctx.wrap_loss_and_grad(loss_and_grad)
     (loss, aux), grads = loss_and_grad(params, batch)
     base_state, params = rule.apply(state.base, params, grads, lr)
-    queue = control.push(state.queue, loss)
+    queue = (control.push(state.queue, loss) if slot is None
+             else control.push_at(state.queue, slot, loss))
     metrics = {
         "loss": loss,
         "aux": aux,

@@ -20,6 +20,7 @@ instead of re-slicing per batch.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict
 
 import numpy as np
@@ -35,6 +36,17 @@ class FCPRSampler:
         self.batch_size = batch_size
         self.n_batches = n // batch_size
         assert self.n_batches > 0
+        # the fixed cycle needs whole batches: the n mod batch_size rows
+        # past the last full batch never enter the epoch.  Which rows land
+        # there is permutation- (i.e. seed-) dependent, so this is sampling
+        # noise, not a fixed exclusion — but it is still data silently left
+        # on the floor, hence the loud warning.
+        self.n_dropped = n - self.n_batches * batch_size
+        if self.n_dropped:
+            warnings.warn(
+                f"FCPRSampler drops {self.n_dropped} of {n} rows "
+                f"(n_data mod batch_size != 0); pad the dataset or pick a "
+                f"divisor batch size to train on every row", stacklevel=2)
         rng = np.random.RandomState(seed)
         perm = np.arange(n)
         if shuffle_quality >= 1.0:

@@ -43,6 +43,13 @@ picks its execution strategy from the mesh:
 ``make_hybrid_step`` mirrors ``train.trainer.make_train_step`` — same
 ``(init_fn, step_fn)`` contract, same metrics surface — so the host loop,
 examples, and benchmarks can swap engines with one line.
+
+Both factories accept ``schedule=`` (a ``repro.sched`` policy): batch
+identity is then drawn on device inside the step/scan (selection key and
+table updates replicated by construction, exactly like the accelerate
+cond), the signatures gain a ``sched_state`` pytree, and batches come from
+``DeviceRing`` epoch arrays instead of host transfers.  ``FCPRSchedule``
+through this path is bit-exact with ``schedule=None``.
 """
 from __future__ import annotations
 
@@ -110,6 +117,19 @@ def _sharded_over_data(fn: Callable, mesh: Mesh, axis):
                      check_rep=False)
 
 
+def _sharded_over_data_sched(fn: Callable, mesh: Mesh, axis):
+    """Scheduled twin of ``_sharded_over_data`` for the 5-ary bodies from
+    ``repro.sched.engine``: (state, params, sched_state, ring, j) with only
+    the ring sharded.  The schedule state (loss table, visit counters) is
+    replicated — its updates are driven by the pmean'd ψ and the
+    step-index-derived key, so every shard writes the same values (the same
+    replication-by-construction argument as the accelerate cond)."""
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(), P(), P(), P(axis), P()),
+                     out_specs=(P(), P(), P(), P()),
+                     check_rep=False)
+
+
 def _constrain_batch(mesh: Mesh, axis, batch):
     """Pin every divisible batch leaf's leading dim to the data axis — the
     GSPMD strategy's equivalent of the manual in_specs ``P(axis)``."""
@@ -130,7 +150,8 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
                      isgd_cfg: ISGDConfig, mesh: Mesh, *,
                      axis: str = "data", inconsistent: bool = True,
                      lr_fn: Optional[Callable] = None,
-                     micro_batches: int = 1, donate: bool = True):
+                     micro_batches: int = 1, donate: bool = True,
+                     schedule=None, sched_seed: int = 0):
     """Returns ``(init_fn, step_fn)`` with the ``make_train_step`` contract.
 
     ``step_fn(state, params, batch, lr=None) -> (state, params, metrics)``
@@ -143,7 +164,23 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
     same new params.  When ``lr`` is not passed, ``lr_fn`` reads ψ̄ from
     the queue of the *incoming* state — the one-step lag of Alg.1 line 19,
     identical on both strategies because both run ``make_step_core``.
+
+    ``schedule`` (a ``repro.sched`` policy; requires ``lr_fn``) switches to
+    on-device batch selection with the scheduled contract — ``step_fn(state,
+    params, sched_state, ring_arrays, j) -> (state, params, sched_state,
+    metrics)`` — where ``ring_arrays`` is a :class:`DeviceRing`'s
+    ``.arrays`` (relaid-out on the manual strategy, ``relayout=False`` on
+    GSPMD, exactly like the chunked engine).  Selection is replicated-
+    deterministic across data shards: the draw key is a pure function of
+    the replicated step index, and the loss-table update consumes the
+    ``AxisReduce``-reduced ψ.
     """
+    if schedule is not None:
+        return _make_scheduled_hybrid(
+            loss_fn, rule, isgd_cfg, mesh, axis=axis,
+            inconsistent=inconsistent, lr_fn=lr_fn,
+            micro_batches=micro_batches, donate=donate, schedule=schedule,
+            sched_seed=sched_seed, chunk_steps=None)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
 
     if tensor_axes(mesh, axis):
@@ -175,12 +212,46 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
     return init_fn, jax.jit(step_fn, **jit_kwargs)
 
 
+def _make_scheduled_hybrid(loss_fn, rule, isgd_cfg, mesh, *, axis,
+                           inconsistent, lr_fn, micro_batches, donate,
+                           schedule, sched_seed, chunk_steps):
+    """Shared scheduled-engine builder: per-step (``chunk_steps=None``) or
+    fused chunk, on either mesh strategy.  Both return ``(init_fn, fn)``
+    with ``fn(state, params, sched_state, ring_arrays, j_or_j0)`` and
+    ``(state, params, sched_state)`` donated."""
+    from repro.sched.engine import chunk_over_schedule, make_scheduled_body
+
+    assert lr_fn is not None, "scheduled engine needs lr_fn (device-side LR)"
+    gspmd = bool(tensor_axes(mesh, axis))
+    init_fn, step_fn = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=LOCAL if gspmd else AxisReduce(axis),
+        micro_batches=micro_batches)
+    if chunk_steps is None:
+        body = make_scheduled_body(step_fn, schedule, isgd_cfg.n_batches,
+                                   sched_seed)
+    else:
+        body = chunk_over_schedule(step_fn, schedule, isgd_cfg.n_batches,
+                                   chunk_steps, sched_seed)
+    if not gspmd:
+        body = _sharded_over_data_sched(body, mesh, axis)
+    inner = body
+
+    def fn(state, params, sched_state, ring_arrays, j):
+        return inner(state, params, sched_state, ring_arrays,
+                     jnp.asarray(j, jnp.int32))
+
+    jit_kwargs = dict(donate_argnums=(0, 1, 2)) if donate else {}
+    return init_fn, jax.jit(fn, **jit_kwargs)
+
+
 def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
                              isgd_cfg: ISGDConfig, mesh: Mesh, *,
                              chunk_steps: int, axis: str = "data",
                              inconsistent: bool = True,
                              lr_fn: Optional[Callable] = None,
-                             micro_batches: int = 1, donate: bool = True):
+                             micro_batches: int = 1, donate: bool = True,
+                             schedule=None, sched_seed: int = 0):
     """Fused K-steps-per-dispatch twin of ``make_hybrid_step``.
 
     The ``lax.scan`` over ``repro.train.chunked.chunk_over_ring`` runs K
@@ -200,8 +271,19 @@ def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
     Returns ``(init_fn, chunk_fn)``; ``chunk_fn(state, params, ring_arrays,
     j0) -> (state, params, stacked_metrics)`` with ``(state, params)``
     donated.
+
+    ``schedule`` switches to the scheduled contract (``chunk_fn(state,
+    params, sched_state, ring_arrays, j0)``) with on-device selection in
+    the scan body — see ``make_hybrid_step``; still ONE host dispatch per
+    K-step chunk, on both strategies.
     """
     assert lr_fn is not None, "chunked engine needs lr_fn (no per-step host)"
+    if schedule is not None:
+        return _make_scheduled_hybrid(
+            loss_fn, rule, isgd_cfg, mesh, axis=axis,
+            inconsistent=inconsistent, lr_fn=lr_fn,
+            micro_batches=micro_batches, donate=donate, schedule=schedule,
+            sched_seed=sched_seed, chunk_steps=chunk_steps)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
 
     if tensor_axes(mesh, axis):

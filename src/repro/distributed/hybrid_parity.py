@@ -20,6 +20,9 @@ subproblem firing):
     program is the reference program)
   * ``chunked(n,1)``  K=4 fused scan vs ``hybrid(n,1)``    — bit-exact
   * ``chunked(1,n)``  K=4 GSPMD scan vs the reference      — bit-exact
+  * ``sched-fcpr(n,1)``/``sched-fcpr(1,n)`` — the SAME chunked legs run
+    through the ``repro.sched`` scheduler path (on-device FCPR policy
+    selection instead of the hard-wired ring walk)        — bit-exact
   * ``sharded-tp``    a (128, 8) weight actually sharded over model=2 vs
     the reference — allclose(tol): cross-shard reductions reassociate f32
   * ``data-parallel`` vs the reference                      — allclose(tol)
@@ -207,6 +210,36 @@ def run_hybrid_parity(steps: int = 32, K: int = 4, tol: float = 1e-5,
     got = drive_chunked(chunk, cinit, ring_g)
     ok, dev = compare(ref, got, exact=True)
     legs[f"chunked(1,n)K{K}"] = {"ok": ok, "max_param": dev}
+
+    # scheduler path (ISSUE 5): the same chunked legs with batch identity
+    # drawn by the FCPR *policy* inside the scan — must stay bit-exact
+    from repro.sched import FCPRSchedule
+    fcpr = FCPRSchedule()
+
+    def drive_sched_chunked(chunk_fn, init_fn, ring):
+        p = jax.tree.map(jnp.copy, params0)
+        s = init_fn(p)
+        ss = fcpr.init(n_batches)
+        outs = []
+        for c in range(steps // K):
+            s, p, ss, ms = chunk_fn(s, p, ss, ring.arrays, c * K)
+            outs.append(jax.tree.map(np.asarray, ms))
+        stacked = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+        return s, p, stacked
+
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh_n1,
+                                            chunk_steps=K, lr_fn=lr_fn,
+                                            donate=False, schedule=fcpr)
+    got = drive_sched_chunked(chunk, cinit, ring)
+    ok, dev = compare(hy_n1, got, exact=True)
+    legs[f"sched-fcpr(n,1)K{K}"] = {"ok": ok, "max_param": dev}
+
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh_1n,
+                                            chunk_steps=K, lr_fn=lr_fn,
+                                            donate=False, schedule=fcpr)
+    got = drive_sched_chunked(chunk, cinit, ring_g)
+    ok, dev = compare(ref, got, exact=True)
+    legs[f"sched-fcpr(1,n)K{K}"] = {"ok": ok, "max_param": dev}
 
     # sharded-tp: a weight genuinely split over model=2 (allclose — the
     # cross-shard loss/grad reductions reassociate f32)

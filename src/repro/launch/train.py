@@ -40,7 +40,15 @@ Two input/dispatch accelerators compose with the synchronous engines
     budget;
   * ``--chunk-steps K`` — the fused engine: K full ISGD steps per host
     dispatch (lax.scan over the ring, bit-exact with per-step; the step
-    count is rounded up to whole chunks).
+    count is rounded up to whole chunks);
+  * ``--schedule fcpr|loss-prop|rank`` — batch *selection* policy
+    (``repro.sched``): selection runs inside the jitted step over the
+    device ring (implied), so loss-aware policies never round-trip their
+    table through the host.  ``fcpr`` through the scheduler path is
+    bit-exact with the default engines; under ``loss-prop``/``rank`` the
+    SPC chart reads the per-batch loss table (ψ-window caveat — see the
+    ``repro.sched`` package doc).  Omitting the flag keeps the hard-wired
+    FCPR paths.
 
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 30 --batch 8 --seq 128
@@ -110,6 +118,36 @@ def _drive_chunks(jchunk, state, params, ring, steps: int, k: int):
     return state, n_chunks * k
 
 
+def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
+                     k: int):
+    """Drive a scheduled engine (per-step when ``k == 1``, fused chunks
+    otherwise), printing the last step of each dispatch group including the
+    policy's realized batch pick.  Returns (state, total_steps)."""
+    if k == 1:
+        for j in range(steps):
+            state, params, sched_state, m = jfn(state, params, sched_state,
+                                                ring.arrays, j)
+            if (j + 1) % 5 == 0 or j == 0:
+                print(f"step {j+1:4d} batch={int(m['batch_idx'])} "
+                      f"loss={float(m['loss']):.4f} "
+                      f"psi_bar={float(m['psi_bar']):.4f} "
+                      f"limit={float(m['limit']):.4f} "
+                      f"accel={bool(m['accelerated'])}")
+        return state, steps
+    n_chunks = -(-steps // k)
+    for c in range(n_chunks):
+        state, params, sched_state, ms = jfn(state, params, sched_state,
+                                             ring.arrays, c * k)
+        visits = np.bincount(np.asarray(ms["batch_idx"]),
+                             minlength=ring.n_batches)
+        print(f"step {(c+1)*k:4d} loss={float(ms['loss'][-1]):.4f} "
+              f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
+              f"limit={float(ms['limit'][-1]):.4f} "
+              f"accel={bool(ms['accelerated'][-1])} "
+              f"visits={visits.tolist()}")
+    return state, n_chunks * k
+
+
 def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
              engine: str = "hybrid"):
     """The synchronous engines — ``hybrid`` (DP × TP, 2-D mesh) and
@@ -148,19 +186,37 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
         ctx = contextlib.nullcontext()
         print(f"params: {n_params/1e6:.1f}M (replicated)")
 
+    schedule = None
+    if args.schedule is not None:
+        from repro.sched import schedule_from_spec
+        schedule = schedule_from_spec(args.schedule)
+        print(f"schedule: {schedule} (device-resident selection; non-FCPR "
+              f"policies read SPC limits from the per-batch loss table)")
     if args.chunk_steps > 1:
         init_fn, jstep = make_chunked_hybrid_step(
             model.loss_fn, rule, icfg, mesh, chunk_steps=args.chunk_steps,
-            inconsistent=not args.consistent, lr_fn=lr_fn)
+            inconsistent=not args.consistent, lr_fn=lr_fn,
+            schedule=schedule)
     else:
         init_fn, jstep = make_hybrid_step(
             model.loss_fn, rule, icfg, mesh,
-            inconsistent=not args.consistent, lr_fn=lr_fn)
+            inconsistent=not args.consistent, lr_fn=lr_fn,
+            schedule=schedule)
     state = init_fn(params)
     s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
 
     with mesh, ctx:
         state = jax.device_put(state, s_sh)
+        if schedule is not None:
+            # scheduled engines select on device: the ring is mandatory
+            ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
+                              args.batch, mesh=mesh, relayout=not tp)
+            sched_state = schedule.init(icfg.n_batches)
+            t0 = time.perf_counter()
+            state, steps = _drive_scheduled(jstep, state, params,
+                                            sched_state, ring, args.steps,
+                                            args.chunk_steps)
+            return state, time.perf_counter() - t0, steps
         if args.chunk_steps > 1:
             # fused engine: sharded device ring + K steps per dispatch
             # (manual strategy slices its relaid-out local block; GSPMD
@@ -206,6 +262,10 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
                          "--engine async-ps (workers dispatch per step from "
                          "host snapshots, there is no fused scan or device "
                          "ring in this engine)")
+    if args.schedule is not None:
+        raise SystemExit("--schedule does not compose with --engine "
+                         "async-ps (workers own fixed FCPR stripes; a "
+                         "shared selection policy would race the table)")
     if sampler.n_batches % args.workers:
         raise SystemExit(f"n_batches={sampler.n_batches} must be a multiple "
                          f"of --workers {args.workers} (per-worker FCPR "
@@ -278,6 +338,13 @@ def main():
                     help="per-step engine fed from the device-resident "
                          "FCPR ring instead of host batches (implied by "
                          "--chunk-steps > 1)")
+    ap.add_argument("--schedule", default=None,
+                    help="batch-selection policy (repro.sched): "
+                         "fcpr | loss-prop | rank, with options as "
+                         "family:k=v,... (e.g. loss-prop:eps=0.2).  "
+                         "Selection runs on device over the ring; fcpr is "
+                         "bit-exact with the default engines; omit for the "
+                         "hard-wired FCPR paths")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

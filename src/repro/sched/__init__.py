@@ -1,0 +1,76 @@
+"""Pluggable device-resident batch scheduling.
+
+ISGD's premise is that batches deserve *inconsistent* treatment.  The paper
+varies per-batch **effort** (Alg. 2 spends extra sub-iterations on
+under-trained batches); the related work varies per-batch **selection** —
+loss-proportional importance sampling (Katharopoulos & Fleuret, 2017) and
+rank-based online batch selection (Loshchilov & Hutter, 2015).  This package
+makes batch *identity* a policy instead of the hard-wired FCPR
+``t = j mod n_b``, while keeping the device-resident, fused-scan fast path:
+selection runs **inside** the jitted step, so a batch fetch is a
+``dynamic_slice`` of the :class:`~repro.data.device_ring.DeviceRing` epoch
+at a traced index — no host round-trip, one dispatch per K-step chunk.
+
+The ``BatchSchedule`` protocol (three pure functions over a device pytree;
+policies themselves are frozen, hashable dataclasses of static
+hyper-parameters, so jitted engines specialize without retracing):
+
+  * ``init(n_batches) -> state`` — a device pytree (loss table, visit
+    counters, ...);
+  * ``select(state, step, key) -> (batch_idx, state)`` — draw the batch for
+    ``step``; ``key`` is ``fold_in(base, step)``, a pure function of the
+    replicated step index, so every data shard draws the same index;
+  * ``update(state, batch_idx, loss) -> state`` — feed back the realized
+    batch loss; engines pass the *globally reduced* ψ (the same scalar the
+    SPC controller monitors), so the table stays replicated across shards.
+
+FCPR bit-exactness contract: :class:`FCPRSchedule` threaded through a
+scheduled engine reproduces the hard-wired engines **bit-exactly** — same
+losses, limits, accelerate decisions, sub-iteration counts, and final
+params.  Its ``select`` is the same integer ``mod``, its ``update`` is the
+identity, it ignores the RNG key (dead code to XLA), and it keeps the FIFO
+queue push — so the traced step computation is the pre-scheduler one.  The
+parity matrices (``repro.sched.parity``, ``repro.distributed.
+hybrid_parity``) pin this with a ψ̄-dependent ``lr_fn``.
+
+ψ-window caveat (SPC semantics under non-FCPR schedules): the control
+chart's "one window = one epoch" reading of the loss queue (core/control.py)
+holds *because* FCPR visits each batch exactly once per n_b steps.  Under
+loss-prop/rank selection the last n_b losses oversample hot batches, which
+would bias ψ̄ upward and inflate the limit with duplicate entries.  Table
+policies therefore set ``uses_table=True``: the step writes the loss queue
+**per batch** (``control.push_at`` at slot ``batch_idx``) instead of FIFO,
+so the queue *is* the per-batch latest-loss table and ψ̄ + kσ are computed
+over one entry per batch — the window means "one (virtual) epoch" again.
+Warm-up is unchanged: the policies' first-epoch FCPR sweep fills the table
+in slot order, and the limit stays +inf until all ``n_b`` slots are seen.
+"""
+from __future__ import annotations
+
+import importlib
+
+# lazy, like repro.distributed: ``python -m repro.sched.parity --devices N``
+# must set the XLA device-count flag before anything imports jax, and this
+# package is imported before the parity submodule runs.
+_EXPORTS = {
+    "FCPRSchedule": "repro.sched.policies",
+    "LossPropSchedule": "repro.sched.policies",
+    "RankSchedule": "repro.sched.policies",
+    "schedule_from_spec": "repro.sched.policies",
+    "make_scheduled_body": "repro.sched.engine",
+    "chunk_over_schedule": "repro.sched.engine",
+    "run_sched_parity": "repro.sched.parity",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(_EXPORTS)

@@ -1,0 +1,163 @@
+"""Batch-selection policies implementing the ``BatchSchedule`` protocol.
+
+Each policy is a frozen (hashable) dataclass holding only static
+hyper-parameters — like ``ReduceCtx``, a jitted step specializes on the
+policy without retracing — and all of its methods are pure functions over a
+device pytree ``state``:
+
+  * ``init(n_batches) -> state``                 (device pytree)
+  * ``select(state, step, key) -> (batch_idx, state)``
+  * ``update(state, batch_idx, loss) -> state``
+
+Policies:
+
+  * :class:`FCPRSchedule` — the paper's §3.4 fixed cycle ``t = j mod n_b``.
+    Stateless (the state carries only ``n_b``), ignores the key, and its
+    ``update`` is the identity, so an engine threading it is bit-exact with
+    the hard-wired FCPR engines (the dead key/fold-in is pruned by XLA).
+  * :class:`LossPropSchedule` — loss-proportional importance sampling in
+    the spirit of Katharopoulos & Fleuret (2017), at batch granularity:
+    sample batch i with probability ``(1-ε)·s_i/Σs + ε/n_b`` where ``s`` is
+    the (min-shifted) EMA-smoothed per-batch loss table.  The ε-uniform
+    mixture floors every batch at ``ε/n_b`` per draw, so no batch starves.
+  * :class:`RankSchedule` — Loshchilov & Hutter (2015) online batch
+    selection: batches ranked by table loss (descending), selection
+    probability decaying exponentially with rank so that
+    ``p_top/p_bottom = pressure``; an optional ε-uniform floor composes the
+    same way.
+
+Both table policies open with one deterministic FCPR sweep (steps
+``0..n_b-1`` visit batches ``0..n_b-1``) so every table slot holds a real
+loss before sampling starts — the same warm-up epoch the SPC control chart
+already spends building its window (``limit=+inf`` until ``n_b`` pushes),
+and the fill order ``control.push_at`` requires.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FCPRSchedule:
+    """Fixed cycle ``t = j mod n_b`` (paper §3.4) as a schedule policy."""
+
+    #: FCPR keeps the FIFO loss queue ("one window = one epoch" holds).
+    uses_table = False
+
+    def init(self, n_batches: int):
+        return {"n_b": jnp.asarray(n_batches, jnp.int32)}
+
+    def select(self, state, step, key):
+        del key                           # deterministic: identity from index
+        return jnp.asarray(step, jnp.int32) % state["n_b"], state
+
+    def update(self, state, batch_idx, loss):
+        return state
+
+
+@dataclass(frozen=True)
+class _TableSchedule:
+    """Shared state/update for table-driven policies: an EMA-smoothed
+    per-batch loss table + visit counters, FCPR-swept for one warm-up epoch.
+
+    ``uses_table=True`` tells the scheduled engine to write the SPC loss
+    queue per *batch* (``control.push_at``) instead of FIFO — under a
+    non-FCPR visit order the FIFO window no longer means "one epoch", so
+    the control chart takes its ψ̄/σ statistics from the per-batch table
+    this policy maintains anyway (see ``repro.sched`` module doc).
+    """
+
+    #: EMA smoothing for the table: ``new = (1-beta)*old + beta*loss``.
+    beta: float = 0.5
+    #: uniform mixing weight — P(select i) ≥ eps/n_b every post-warm-up draw.
+    eps: float = 0.1
+
+    uses_table = True
+
+    def init(self, n_batches: int):
+        return {"table": jnp.zeros((n_batches,), jnp.float32),
+                "visits": jnp.zeros((n_batches,), jnp.int32)}
+
+    def _scores(self, table):
+        raise NotImplementedError
+
+    def select(self, state, step, key):
+        table = state["table"]
+        n_b = table.shape[0]
+        p = self._scores(table)
+        p = (1.0 - self.eps) * p + self.eps / n_b
+        drawn = jax.random.categorical(key, jnp.log(p))
+        step = jnp.asarray(step, jnp.int32)
+        # warm-up epoch: deterministic FCPR sweep fills the table in order
+        t = jnp.where(step < n_b, step % n_b, drawn.astype(jnp.int32))
+        return t, state
+
+    def update(self, state, batch_idx, loss):
+        table, visits = state["table"], state["visits"]
+        loss = jnp.asarray(loss, jnp.float32)
+        old = table[batch_idx]
+        seen = visits[batch_idx] > 0
+        new = jnp.where(seen, (1.0 - self.beta) * old + self.beta * loss,
+                        loss)
+        return {"table": table.at[batch_idx].set(new),
+                "visits": visits.at[batch_idx].add(1)}
+
+
+@dataclass(frozen=True)
+class LossPropSchedule(_TableSchedule):
+    """Sample ∝ smoothed per-batch loss (min-shifted so the distribution is
+    scale- and offset-robust), ε-uniform mixed."""
+
+    def _scores(self, table):
+        n_b = table.shape[0]
+        s = table - jnp.min(table)
+        total = jnp.sum(s)
+        # all-equal table (e.g. warm-up zeros) -> uniform
+        return jnp.where(total > 0.0, s / jnp.maximum(total, 1e-30),
+                         1.0 / n_b)
+
+
+@dataclass(frozen=True)
+class RankSchedule(_TableSchedule):
+    """Exponential-decay ranking (Loshchilov & Hutter 2015): sort batches by
+    table loss descending; p(rank r) ∝ exp(-r·ln(pressure)/n_b), i.e. the
+    top-ranked batch is ``pressure``× as likely as the bottom one."""
+
+    #: selection pressure s_e — p_top / p_bottom.
+    pressure: float = 100.0
+    eps: float = 0.0                      # exp decay is already > 0 everywhere
+
+    def _scores(self, table):
+        n_b = table.shape[0]
+        order = jnp.argsort(-table)           # rank 0 = highest loss
+        ranks = jnp.zeros((n_b,), jnp.int32).at[order].set(
+            jnp.arange(n_b, dtype=jnp.int32))
+        # ranks span 0..n_b-1, so the decay rate divides by n_b-1 to make
+        # the realized p_top/p_bottom exactly ``pressure``
+        rate = jnp.log(self.pressure) / max(n_b - 1, 1)
+        return jax.nn.softmax(-rate * ranks.astype(jnp.float32))
+
+
+_FAMILIES = {"fcpr": FCPRSchedule, "loss-prop": LossPropSchedule,
+             "rank": RankSchedule}
+
+
+def schedule_from_spec(spec: str):
+    """Parse a ``--schedule`` CLI spec: ``family[:k=v,...]`` — e.g.
+    ``"fcpr"``, ``"loss-prop"``, ``"loss-prop:eps=0.2,beta=0.3"``,
+    ``"rank:pressure=50"``."""
+    family, _, rest = spec.partition(":")
+    cls = _FAMILIES.get(family)
+    if cls is None:
+        raise ValueError(f"unknown schedule {family!r} "
+                         f"(choose from {sorted(_FAMILIES)})")
+    kwargs = {}
+    for kv in filter(None, rest.split(",")):
+        k, sep, v = kv.partition("=")
+        if not sep:
+            raise ValueError(f"malformed schedule option {kv!r} (want k=v)")
+        kwargs[k] = float(v)
+    return cls(**kwargs)

@@ -1,8 +1,9 @@
 from repro.train import checkpoints
 from repro.train.chunked import chunk_over_ring, make_chunked_train_step
-from repro.train.trainer import (TrainLog, make_loss_and_grad, make_step_core,
+from repro.train.trainer import (TrainLog, make_loss_and_grad,
+                                 make_scheduled_train_step, make_step_core,
                                  make_train_step, train)
 
 __all__ = ["make_train_step", "make_step_core", "make_chunked_train_step",
-           "chunk_over_ring", "make_loss_and_grad", "train", "TrainLog",
-           "checkpoints"]
+           "make_scheduled_train_step", "chunk_over_ring",
+           "make_loss_and_grad", "train", "TrainLog", "checkpoints"]

@@ -71,7 +71,8 @@ def make_chunked_train_step(loss_fn: Callable, rule: UpdateRule,
                             inconsistent: bool = True,
                             lr_fn: Callable = None, donate: bool = True,
                             reduce_ctx: ReduceCtx = LOCAL,
-                            micro_batches: int = 1):
+                            micro_batches: int = 1, schedule=None,
+                            sched_seed: int = 0):
     """Single-device fused engine; distributed twin:
     ``repro.distributed.make_chunked_data_parallel_step``.
 
@@ -80,11 +81,25 @@ def make_chunked_train_step(loss_fn: Callable, rule: UpdateRule,
     is required — inside a fused chunk the LR *must* be derived on device
     from the previous step's queue; there is no host between steps to pass
     an override.
+
+    ``schedule`` (a ``repro.sched`` policy) swaps the hard-wired FCPR ring
+    walk for on-device policy selection: the chunk signature becomes
+    ``chunk_fn(state, params, sched_state, ring_arrays, j0) -> (state,
+    params, sched_state, stacked_metrics)`` with ``sched_state`` =
+    ``schedule.init(isgd_cfg.n_batches)`` threaded through the scan carry
+    (still one host dispatch per K steps; ``FCPRSchedule`` is bit-exact
+    with ``schedule=None``).
     """
     assert lr_fn is not None, "chunked engine needs lr_fn (no per-step host)"
     init_fn, step_fn = make_step_core(
         loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
         reduce_ctx=reduce_ctx, micro_batches=micro_batches)
+    if schedule is not None:
+        from repro.sched.engine import chunk_over_schedule
+        chunk_fn = chunk_over_schedule(step_fn, schedule, isgd_cfg.n_batches,
+                                       chunk_steps, sched_seed)
+        jit_kwargs = dict(donate_argnums=(0, 1, 2)) if donate else {}
+        return init_fn, jax.jit(chunk_fn, **jit_kwargs)
     chunk_fn = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(chunk_fn, **jit_kwargs)

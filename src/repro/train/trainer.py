@@ -76,21 +76,26 @@ def make_step_core(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
     previous step's statistics (Alg.1 line 19).  The chunked engine relies
     on this one-step lag being inside the step, not the host loop, for its
     bit-exact parity.
+
+    ``step_fn(state, params, batch, lr=None, slot=None)``: ``slot`` routes
+    the SPC queue write — ``None`` keeps the FIFO push; a traced batch
+    index writes the per-batch loss table instead (non-FCPR schedules,
+    see ``repro.sched``).
     """
     lg = make_loss_and_grad(loss_fn, micro_batches)
 
     def init_fn(params):
         return isgd_init(rule, isgd_cfg, params)
 
-    def step_fn(state, params, batch, lr=None):
+    def step_fn(state, params, batch, lr=None, slot=None):
         if lr is None:
             from repro.core import control as C
             lr = lr_fn(C.mean(state.queue))
         if inconsistent:
             return isgd_step(rule, isgd_cfg, lg, state, params, batch, lr,
-                             reduce_ctx=reduce_ctx)
+                             reduce_ctx=reduce_ctx, slot=slot)
         return consistent_step(rule, lg, state, params, batch, lr,
-                               reduce_ctx=reduce_ctx)
+                               reduce_ctx=reduce_ctx, slot=slot)
 
     return init_fn, step_fn
 
@@ -116,6 +121,36 @@ def make_train_step(loss_fn: Callable, rule: UpdateRule, isgd_cfg: ISGDConfig,
         reduce_ctx=reduce_ctx)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
     return init_fn, jax.jit(step_fn, **jit_kwargs)
+
+
+def make_scheduled_train_step(loss_fn: Callable, rule: UpdateRule,
+                              isgd_cfg: ISGDConfig, schedule, *,
+                              inconsistent: bool = True,
+                              lr_fn: Callable = None, donate: bool = True,
+                              reduce_ctx: ReduceCtx = LOCAL,
+                              micro_batches: int = 1, sched_seed: int = 0):
+    """Per-step engine with on-device batch *selection* (``repro.sched``).
+
+    Returns ``(init_fn, step_fn)`` where ``step_fn(state, params,
+    sched_state, ring_arrays, j) -> (state, params, sched_state, metrics)``
+    — the batch for step ``j`` is drawn by ``schedule`` inside the jit and
+    fetched as a ``dynamic_slice`` of the ring arrays (a ``DeviceRing``'s
+    ``.arrays``), so non-FCPR policies never round-trip the loss table
+    through the host.  ``sched_state`` starts as
+    ``schedule.init(isgd_cfg.n_batches)``.  ``lr_fn`` is required: the LR
+    must be derived on device (selection already is).  With
+    ``FCPRSchedule`` this engine is bit-exact with ``make_train_step`` fed
+    by the host sampler (``repro.sched.parity`` pins it).
+    """
+    assert lr_fn is not None, "scheduled engine needs lr_fn (device-side LR)"
+    from repro.sched.engine import make_scheduled_body
+    init_fn, step_fn = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=reduce_ctx, micro_batches=micro_batches)
+    body = make_scheduled_body(step_fn, schedule, isgd_cfg.n_batches,
+                               sched_seed)
+    jit_kwargs = dict(donate_argnums=(0, 1, 2)) if donate else {}
+    return init_fn, jax.jit(body, **jit_kwargs)
 
 
 @dataclass
