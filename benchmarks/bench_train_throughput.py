@@ -15,6 +15,14 @@ Emits ``BENCH_train_throughput.json`` — the repo's first perf-trajectory
 baseline; the acceptance bar is ≥2x steps/sec for chunked+ring K=32 over
 the per-step host loop on CPU.
 
+``--model transformer`` swaps the step body for ``paper-transformer-tiny``
+through ``build_model`` (ISSUE 6: the fused engines on an LM body) and
+writes ``BENCH_transformer_throughput.json``.  The transformer body is
+compute-bound even at the tiny tier on CPU (measured ~1.3x for K=32 at
+full length), so its bar is "the fused scan is at least as fast as the
+per-step loop" with 10% smoke-noise headroom (0.9x) — the 2x amortization
+headline stays pinned to the dispatch-bound CNN regime.
+
 The config is sized for the regime the fused engine targets: per-step
 dispatch/transfer overhead comparable to or larger than per-step compute —
 which is the small-model CPU reproduction here, and (ROADMAP) any
@@ -52,34 +60,56 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 def run_single(args) -> dict:
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
-    from repro.configs.paper_cnns import CNNConfig, ConvSpec
     from repro.core import ISGDConfig
     from repro.data import DeviceRing, FCPRSampler, make_classification
     from repro.distributed import (make_chunked_data_parallel_step,
                                    make_data_parallel_step)
     from repro.launch.mesh import make_data_mesh
-    from repro.models import cnn_loss_fn, init_cnn
     from repro.optim import momentum
 
     n_dev = len(jax.devices())
     steps = args.steps - args.steps % 32 or 32     # divisible by every K
-    # LeNet-shaped small CNN at 8x8/1ch — the dispatch-bound regime the
-    # fused engine exists for (see module docstring).
-    cfg = CNNConfig(name="lenet-8x8", image_size=8, channels=1,
-                    num_classes=10,
-                    convs=(ConvSpec(4, 3, pool=2), ConvSpec(8, 3, pool=2)),
-                    hidden=(24,))
-    data = make_classification(0, args.batch * args.n_batches,
-                               cfg.image_size, cfg.channels, 10,
-                               noise=0.6, class_spread=2.0)
+    if args.model == "transformer":
+        # paper-transformer-tiny through build_model: the fused-chunk
+        # engine on the zoo's LM step body (reference kernels on CPU;
+        # the Pallas path swaps in on TPU via --kernels at the launcher).
+        from repro.configs import zoo_config
+        from repro.models import build_model
+
+        cfg = zoo_config("transformer", "tiny")
+        model = build_model(cfg)
+        rng = np.random.RandomState(0)
+        toks = rng.randint(
+            0, cfg.vocab_size,
+            size=(args.batch * args.n_batches, args.seq)).astype(np.int32)
+        data = {"tokens": toks}
+        loss_fn = model.loss_fn
+        params0 = model.init(jax.random.PRNGKey(0), max_seq=args.seq)
+        model_name = cfg.name
+    else:
+        from repro.configs.paper_cnns import CNNConfig, ConvSpec
+        from repro.models import cnn_loss_fn, init_cnn
+
+        # LeNet-shaped small CNN at 8x8/1ch — the dispatch-bound regime
+        # the fused engine exists for (see module docstring).
+        cfg = CNNConfig(name="lenet-8x8", image_size=8, channels=1,
+                        num_classes=10,
+                        convs=(ConvSpec(4, 3, pool=2),
+                               ConvSpec(8, 3, pool=2)),
+                        hidden=(24,))
+        data = make_classification(0, args.batch * args.n_batches,
+                                   cfg.image_size, cfg.channels, 10,
+                                   noise=0.6, class_spread=2.0)
+        loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)    # noqa: E731
+        params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+        model_name = cfg.name
     sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
     icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.5, stop=3,
                       zeta=0.02)
-    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)        # noqa: E731
     rule = momentum(0.9)
     lr_fn = lambda _: jnp.asarray(0.05)                  # noqa: E731
-    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
     mesh = make_data_mesh() if n_dev > 1 else None
 
     def fresh():
@@ -141,7 +171,7 @@ def run_single(args) -> dict:
     base = runs[0]["steps_per_sec"]
     k32 = next(r for r in runs if r["chunk"] == 32)["steps_per_sec"]
     return {
-        "config": {"model": "lenet-8x8", "batch": args.batch,
+        "config": {"model": model_name, "batch": args.batch,
                    "n_batches": sampler.n_batches, "steps": steps,
                    "devices": n_dev, "ring_bytes": ring.nbytes},
         "runs": runs,
@@ -151,15 +181,28 @@ def run_single(args) -> dict:
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=("cnn", "transformer"), default="cnn")
     ap.add_argument("--steps", type=int, default=192)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--n-batches", type=int, default=8, dest="n_batches")
+    ap.add_argument("--seq", type=int, default=64,
+                    help="sequence length (transformer only)")
     ap.add_argument("--smoke", action="store_true",
                     help="in-process reduced run (CI)")
     ap.add_argument("--single", action="store_true",
                     help="in-process run on current devices")
-    ap.add_argument("--out", default="BENCH_train_throughput.json")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.out is None:
+        args.out = (f"BENCH_{args.model}_throughput.json"
+                    if args.model != "cnn" else
+                    "BENCH_train_throughput.json")
+    # the 2x amortization bar is for the dispatch-bound CNN; the
+    # transformer tiny body is compute-bound even on CPU (full-length
+    # 1-device run measures ~1.3x for K=32), so the bar there is "the
+    # fused scan is not slower than the per-step loop", with 10% head-
+    # room because the 64-step smoke is timer-noise-limited on CI
+    bar = {"cnn": 2.0, "transformer": 0.9}[args.model]
 
     if args.smoke:
         args.steps = min(args.steps, 64)
@@ -176,6 +219,7 @@ def main():
                 if n > 1 else "")
             child_out = os.path.join(ROOT, f".bench_child_{n}.json")
             cmd = [sys.executable, os.path.abspath(__file__), "--single",
+                   "--model", args.model, "--seq", str(args.seq),
                    "--steps", str(args.steps), "--batch", str(args.batch),
                    "--n-batches", str(args.n_batches), "--out", child_out]
             subprocess.run(cmd, check=True, env=env)
@@ -185,7 +229,8 @@ def main():
         payload = {"mode": "full", "results": results}
 
     for res in payload["results"]:
-        res["speedup_ok"] = res["speedup_chunked32_vs_per_step_host"] >= 2.0
+        res["speedup_bar"] = bar
+        res["speedup_ok"] = res["speedup_chunked32_vs_per_step_host"] >= bar
         if res["config"]["devices"] > 1:
             res["note"] = (
                 "forced host devices oversubscribe the physical cores "
@@ -199,14 +244,15 @@ def main():
     print(f"wrote {args.out}")
     try:
         from common import save_json
-        save_json("train_throughput", payload)
+        save_json(f"{args.model}_throughput" if args.model != "cnn"
+                  else "train_throughput", payload)
     except Exception:
         pass
     for res in payload["results"]:
         s = res["speedup_chunked32_vs_per_step_host"]
         print(f"devices={res['config']['devices']}: chunked+ring K=32 is "
               f"{s:.2f}x the per-step host loop "
-              f"({'OK' if s >= 2.0 else 'BELOW 2x BAR'})")
+              f"({'OK' if s >= bar else f'BELOW {bar}x BAR'})")
 
 
 if __name__ == "__main__":

@@ -8,9 +8,11 @@ from repro.configs.base import (
     shape_applicable,
 )
 from repro.configs.paper_cnns import CIFAR_QUICK, LENET, ALEXNET_SMALL, PAPER_CNNS
+from repro.configs.paper_transformer import ZOO, ZOO_MODELS, ZOO_TIERS, zoo_config
 
 __all__ = [
     "ARCH_IDS", "INPUT_SHAPES", "LONG_CONTEXT_ARCHS", "InputShape",
     "ModelConfig", "get_config", "shape_applicable",
     "CIFAR_QUICK", "LENET", "ALEXNET_SMALL", "PAPER_CNNS",
+    "ZOO", "ZOO_MODELS", "ZOO_TIERS", "zoo_config",
 ]

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import divisor_tile
+
 NEG_INF = -1e30
 
 
@@ -72,9 +74,10 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
     done by the caller in ops.py).  Returns (BH, Sq, hd) in q.dtype."""
     BH, Sq, hd = q.shape
     Sk = k.shape[1]
-    bq = min(bq, Sq)
-    bk = min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0
+    # requested tiles are upper bounds (see kernels/tiling.py): model seq
+    # lengths need not be 128-aligned
+    bq = divisor_tile(Sq, bq)
+    bk = divisor_tile(Sk, bk)
     grid = (BH, Sq // bq, Sk // bk)
     scale = 1.0 / (hd ** 0.5)
     return pl.pallas_call(

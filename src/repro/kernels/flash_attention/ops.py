@@ -3,8 +3,16 @@
 Maps (B, S, H, hd) q and (B, S, K, hd) k/v onto the kernel's flattened
 (B·H, S, hd) layout; the shared KV head of each query-head group is
 expanded with a gather (broadcast, no HBM copy under XLA).
+
+``gqa_flash`` is trainable: the forward runs the Pallas kernel, the
+backward is the standard softmax-attention gradient obtained by
+differentiating the oracle (recompute-from-inputs — exactly what a flash
+backward does; the fused TPU bwd kernel is a follow-up, mirroring
+fused_xent's split).
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +25,27 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, bq, bk):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           bq=bq, bk=bk, interpret=_use_interpret())
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bk):
+    return _flash(q, k, v, causal, window, bq, bk), (q, k, v)
+
+
+def _flash_bwd(causal, window, bq, bk, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
 def gqa_flash(q, k, v, *, causal=True, window=None, bq=128, bk=128):
     """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) -> (B, Sq, H, hd)."""
     B, Sq, H, hd = q.shape
@@ -25,8 +54,7 @@ def gqa_flash(q, k, v, *, causal=True, window=None, bq=128, bk=128):
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
     kf = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
     vf = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
-    of = flash_attention(qf, kf, vf, causal=causal, window=window,
-                         bq=bq, bk=bk, interpret=_use_interpret())
+    of = _flash(qf, kf, vf, causal, window, bq, bk)
     return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
 
 

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import divisor_tile
+
 
 def _xent_kernel(h_ref, w_ref, label_ref, out_ref, m_ref, s_ref, g_ref,
                  *, bv: int, vocab_size: int):
@@ -61,9 +63,10 @@ def fused_xent(h, w, labels, *, vocab_size: int, bn: int = 256, bv: int = 512,
     """h: (N, d); w: (d, Vp); labels: (N,) -> nll (N,) f32."""
     N, d = h.shape
     Vp = w.shape[1]
-    bn = min(bn, N)
-    bv = min(bv, Vp)
-    assert N % bn == 0 and Vp % bv == 0, (N, bn, Vp, bv)
+    # requested tiles are upper bounds: training bodies hand us whatever
+    # B·S / padded-vocab the config dictates, so shrink to dividing tiles
+    bn = divisor_tile(N, bn)
+    bv = divisor_tile(Vp, bv)
     grid = (N // bn, Vp // bv)
     return pl.pallas_call(
         functools.partial(_xent_kernel, bv=bv, vocab_size=vocab_size),

@@ -1,6 +1,13 @@
 """Jit'd wrapper: full SSD forward = Pallas intra-chunk kernel + lax.scan
-inter-chunk recurrence + off-diagonal contribution."""
+inter-chunk recurrence + off-diagonal contribution.
+
+``ssd_chunked_pallas`` is trainable: the forward runs the Pallas kernel,
+the backward differentiates the block-matmul reference (``models.ssm.
+ssd_chunked`` — the same chunk decomposition, so the recompute cost matches
+a flash-style backward; a fused bwd kernel is the TPU follow-up)."""
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +19,7 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int):
+def _ssd_pallas_fwd(x, dt, A, B, C, chunk: int):
     """Same contract as models.ssm.ssd_chunked.
 
     x: (b, S, nh, hd); dt: (b, S, nh); A: (nh,); B/C: (b, S, G, ds).
@@ -21,8 +28,9 @@ def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int):
     b, S, nh, hd = x.shape
     G, ds = B.shape[-2], B.shape[-1]
     cl = min(chunk, S)
+    while S % cl:                 # largest dividing chunk <= requested
+        cl -= 1
     nc = S // cl
-    assert nc * cl == S
     rep = nh // G
 
     Bh = jnp.repeat(B, rep, axis=-2)
@@ -56,3 +64,30 @@ def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int):
                        prevs, jnp.exp(cum))
     y = (y_diag + Y_off).reshape(b, S, nh, hd)
     return y, final_state
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(x, dt, A, B, C, chunk):
+    return _ssd_pallas_fwd(x, dt, A, B, C, chunk)
+
+
+def _ssd_fwd(x, dt, A, B, C, chunk):
+    return _ssd(x, dt, A, B, C, chunk), (x, dt, A, B, C)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, B, C = res
+    from repro.models.ssm import ssd_chunked   # lazy: models lazily import us
+    _, vjp = jax.vjp(
+        lambda x_, dt_, A_, B_, C_: ssd_chunked(x_, dt_, A_, B_, C_,
+                                                chunk=chunk),
+        x, dt, A, B, C)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_chunked_pallas(x, dt, A, B, C, *, chunk: int):
+    """Trainable surface — see module docstring; contract of ``_ssd_pallas_fwd``."""
+    return _ssd(x, dt, A, B, C, chunk)

@@ -1,0 +1,26 @@
+"""Block-size selection shared by the Pallas kernels.
+
+The benches only ever drove the kernels at 128-aligned shapes; training
+bodies produce whatever ``B·S`` / seq / vocab the config family dictates.
+``divisor_tile`` keeps the kernels' "tiles divide the axis" invariant by
+shrinking the requested tile to the largest divisor of the axis length,
+preferring MXU-aligned (multiple-of-``align``) candidates — on TPU the
+config families are sized so an aligned divisor exists; the unaligned
+fallback keeps ragged CPU/CI shapes correct (interpret mode has no MXU to
+starve).
+"""
+from __future__ import annotations
+
+
+def divisor_tile(n: int, want: int, align: int = 128) -> int:
+    """Largest tile <= min(want, n) dividing n, preferring multiples of
+    ``align``."""
+    assert n >= 1 and want >= 1
+    want = min(want, n)
+    for b in range(want - want % align, 0, -align):
+        if n % b == 0:
+            return b
+    b = want
+    while n % b:
+        b -= 1
+    return b

@@ -50,8 +50,20 @@ Two input/dispatch accelerators compose with the synchronous engines
     ``repro.sched`` package doc).  Omitting the flag keeps the hard-wired
     FCPR paths.
 
+Model selection: ``--arch`` names an assigned architecture config
+(``repro.configs``, usually with ``--reduced``); ``--model
+transformer|moe|ssm`` picks the ``paper_transformer`` zoo family instead
+(``--tier tiny|base``).  ``--kernels pallas|reference|interpret`` routes the
+step-body hot spots (flash-attention, fused-xent, ssd_scan) —
+``pallas`` falls back to the ``ref.py`` paths where Pallas lowering is
+unavailable (see ``repro.kernels.policy``); ``--precision bf16|f32`` is the
+compute dtype (ψ statistics and the SPC queue stay f32 either way);
+``--remat full|tp_out|none`` sets the chunk-scan-boundary checkpoint policy.
+
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 30 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --model transformer \
+      --kernels pallas --chunk-steps 32 --steps 64 --batch 8 --seq 64
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.train --arch internlm2-1.8b --reduced \
       --engine hybrid --model-parallel 2 --chunk-steps 8 --steps 32 \
@@ -68,7 +80,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import ZOO_MODELS, ZOO_TIERS, get_config, zoo_config
 from repro.core import ISGDConfig
 from repro.core.schedule import constant_lr
 from repro.data import DeviceRing, FCPRSampler, make_lm_tokens, ring_or_prefetch
@@ -299,9 +311,28 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="assigned architecture config (repro.configs)")
+    ap.add_argument("--model", default=None, choices=list(ZOO_MODELS),
+                    help="paper_transformer zoo family (alternative to "
+                         "--arch): transformer | moe | ssm")
+    ap.add_argument("--tier", default="tiny", choices=list(ZOO_TIERS),
+                    help="zoo tier for --model (tiny = CPU CI, base = "
+                         "single-host accelerator)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant (CPU)")
+    ap.add_argument("--kernels", default="reference",
+                    choices=["pallas", "reference", "interpret"],
+                    help="step-body hot-spot implementations; pallas falls "
+                         "back to the ref.py paths off-TPU "
+                         "(repro.kernels.policy)")
+    ap.add_argument("--precision", default="bf16", choices=["bf16", "f32"],
+                    help="compute dtype for params/activations (psi "
+                         "statistics and the SPC queue stay f32)")
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "tp_out", "none"],
+                    help="checkpoint policy at the block-scan boundary "
+                         "(tp_out saves post-all-reduce activations)")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -347,10 +378,24 @@ def main():
                          "hard-wired FCPR paths")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
+    if (args.arch is None) == (args.model is None):
+        raise SystemExit("pass exactly one of --arch or --model")
+    if args.model is not None:
+        cfg = zoo_config(args.model, args.tier)
+        if args.reduced:
+            raise SystemExit("--reduced applies to --arch configs; the zoo "
+                             "CPU tier is --tier tiny")
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+    from repro.kernels.policy import kernels_note, resolve_kernels
+    print(kernels_note(args.kernels, resolve_kernels(args.kernels)))
+    model = build_model(
+        cfg, kernels=args.kernels,
+        param_dtype=jnp.float32 if args.precision == "f32" else jnp.bfloat16,
+        remat=args.remat != "none",
+        remat_policy="tp_out" if args.remat == "tp_out" else "full")
 
     data = make_lm_tokens(0, args.n_seqs, args.seq, cfg.vocab_size)
     sampler = FCPRSampler(data, batch_size=args.batch, seed=1)

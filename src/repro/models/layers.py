@@ -150,8 +150,14 @@ def init_attn(key, cfg, dtype=jnp.bfloat16):
 
 
 def attn_forward(params, cfg, x, positions, *, window, use_rope=True,
-                 q_chunk=DEFAULT_Q_CHUNK):
-    """Full-sequence causal attention. x: (B, S, d)."""
+                 q_chunk=DEFAULT_Q_CHUNK, use_flash=False):
+    """Full-sequence causal attention. x: (B, S, d).
+
+    ``use_flash`` swaps the chunked-scan reference path for the Pallas
+    flash kernel (same GQA layout; numerically equal within the
+    ``repro.kernels.numerics`` tolerances, bit-identical in neither
+    direction — the switch is per-``build_model``, never per-step).
+    """
     B, S, _ = x.shape
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = (x @ params["wq"]).reshape(B, S, H, hd)
@@ -160,7 +166,12 @@ def attn_forward(params, cfg, x, positions, *, window, use_rope=True,
     if use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    o = _attend_chunked(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    if use_flash:
+        from repro.kernels.flash_attention.ops import gqa_flash
+        o = gqa_flash(q, k, v, causal=True, window=window)
+    else:
+        o = _attend_chunked(q, k, v, causal=True, window=window,
+                            q_chunk=q_chunk)
     return o.reshape(B, S, H * hd) @ params["wo"], (k, v)
 
 

@@ -26,13 +26,21 @@ def make_loss_and_grad(loss_fn: Callable, micro_batches: int = 1):
     ``micro_batches`` > 1 splits the global batch and accumulates gradients
     in f32 over a lax.scan — the standard memory lever: activation temp
     scales with the micro-batch, not the global batch (§Perf memory term).
+
+    The loss/aux scalars are upcast to f32 HERE, before anything reads
+    them: ψ feeds the SPC queue (EMA/variance), the control limit and the
+    loss-driven ``lr_fn``, all of which are f32 by contract.  A bf16 ψ
+    entering the queue would survive ``control.push``'s dtype cast with its
+    precision already gone — the rounded variance widens the control limit
+    and silently suppresses accelerate (tests/test_precision.py pins this).
     """
     vag = jax.value_and_grad(loss_fn, has_aux=True)
 
     if micro_batches <= 1:
         def lg(params, batch):
             (loss, aux), grads = vag(params, batch)
-            return (loss, aux), grads
+            return (jnp.asarray(loss, jnp.float32),
+                    jnp.asarray(aux, jnp.float32)), grads
         return lg
 
     def lg(params, batch):
@@ -50,7 +58,8 @@ def make_loss_and_grad(loss_fn: Callable, micro_batches: int = 1):
             (l, a), g = vag(params, mb)
             g_acc = jax.tree.map(lambda acc, gi: acc + gi.astype(jnp.float32),
                                  g_acc, g)
-            return (loss_acc + l, aux_acc + a, g_acc), None
+            return (loss_acc + jnp.asarray(l, jnp.float32),
+                    aux_acc + jnp.asarray(a, jnp.float32), g_acc), None
 
         from repro.analysis.mode import scan_unroll
         (loss, aux, grads), _ = jax.lax.scan(

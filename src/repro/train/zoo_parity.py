@@ -1,0 +1,290 @@
+"""Zoo parity matrix: the fused engines re-proven on non-CNN step bodies.
+
+Every engine-parity guarantee the repo makes was first established on CNNs
+and toy regressions (``distributed/parity.py``, ``hybrid_parity.py``).
+ISSUE 6 puts transformer / MoE / SSM step bodies through the same engines;
+this module re-proves the guarantees there:
+
+  * **fcpr bit-exactness** — per-step ``make_train_step`` vs the fused
+    chunked scan ``make_chunked_train_step`` at K ∈ {1, K} must produce
+    bit-identical parameters, metrics and acceleration counts on the
+    ``paper-transformer-tiny`` body (and K on the MoE / SSM bodies).
+  * **ψ̄-lagged lr_fn** — every leg drives a ψ̄-dependent ``lr_fn``; a
+    control leg re-runs the reference frozen at ``lr_fn(0.0)`` and asserts
+    the trajectory *differs*, proving the matrix can catch a dropped
+    schedule (the ISSUE 4 regression) on a transformer body too.
+  * **sched composition** — the same chunked leg run through the
+    ``repro.sched`` FCPR policy (on-device batch selection) stays
+    bit-exact with the hard-wired ring walk.
+  * **hybrid engine** — per-step vs chunked ``make_chunked_hybrid_step``
+    on a (n, 1) data mesh, bit-exact (runs at any device count; the CI
+    matrix exercises 1 and 8).
+  * **kernel parity** — the ``--kernels interpret`` build (Pallas kernels
+    in interpret mode) matches the reference build's loss and gradients
+    within the per-kernel tolerances of ``repro.kernels.numerics``.
+
+Data is a skewed FCPR epoch — batch 0 is uniform-random tokens (hard),
+the rest are short repeated n-grams (easy) — so the ISGD subproblem
+actually fires and the acceleration path is part of every comparison.
+
+Usable two ways (same pattern as ``distributed/hybrid_parity.py``):
+
+  * in-process: ``run_zoo_parity()`` on whatever devices exist;
+  * subprocess with a forced device count (the CI acceptance check):
+
+      PYTHONPATH=src python -m repro.train.zoo_parity --devices 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _reexec_with_devices(n: int, argv: list) -> int:
+    """Re-run this module in a child with the device count forced.
+
+    ``repro.train`` imports jax at package-import time, so by the time
+    ``main`` parses ``--devices`` the XLA backend is already initialised
+    in this process — a subprocess with XLA_FLAGS set is the only way to
+    honour the flag (``hybrid_parity`` gets away with an in-process env
+    mutation only because ``repro.distributed`` imports lazily)."""
+    import subprocess
+
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    cmd = [sys.executable, "-m", "repro.train.zoo_parity", *argv]
+    return subprocess.call(cmd, env=env)
+
+
+def run_zoo_parity(steps: int = 32, K: int = 32, verbose: bool = False,
+                   models: tuple = ("transformer", "moe", "ssm")) -> dict:
+    """Returns {"ok": bool, "devices": int, "legs": {name: report}, ...}."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import zoo_config
+    from repro.core import ISGDConfig
+    from repro.data import DeviceRing, FCPRSampler
+    from repro.distributed.data_parallel import (make_chunked_hybrid_step,
+                                                 make_hybrid_step)
+    from repro.kernels.numerics import TOLERANCES
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.optim import momentum
+    from repro.sched import FCPRSchedule
+    from repro.train import make_chunked_train_step, make_train_step
+
+    n_dev = len(jax.devices())
+    n_batches, batch, seq = 4, 8, 64
+    assert steps % K == 0 and steps >= 2 * n_batches, (steps, K, n_batches)
+    assert batch % n_dev == 0, f"batch {batch} not divisible over {n_dev}"
+
+    rule = momentum(0.9)
+    icfg = ISGDConfig(n_batches=n_batches, k_sigma=1.0, stop=3, zeta=0.01)
+
+    def lr_fn(psi_bar):
+        # ψ̄-dependent on purpose: freezing ψ̄=0 shifts the whole trajectory
+        return jnp.asarray(0.05) + 0.005 * jnp.minimum(psi_bar, 1.0)
+
+    def skewed_epoch(vocab, rng):
+        """Batch 0 uniform-random (hard), rest repeated 4-grams (easy)."""
+        hard = rng.randint(0, vocab, size=(batch, seq))
+        base = rng.randint(0, vocab, size=(3, 4))
+        easy = np.stack([np.tile(base[i % 3], (batch, seq // 4))
+                         for i in range(n_batches - 1)])
+        return np.concatenate([hard[None], easy], 0) \
+                 .reshape(-1, seq).astype(np.int32)
+
+    def compare(ref, got, exact, tol=0.0):
+        """(ok, max_param_dev) for (state, params, metrics) triples."""
+        r_s, r_p, r_m = ref
+        g_s, g_p, g_m = got
+        dev = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                      - np.asarray(b, np.float32))))
+                  for a, b in zip(jax.tree.leaves(r_p), jax.tree.leaves(g_p)))
+        ok = True
+        for key in ("loss", "limit", "psi_bar", "accelerated", "sub_iters"):
+            a, b = r_m[key], g_m[key]
+            if exact:
+                ok &= bool(np.array_equal(a, b))
+            else:
+                finite = np.isfinite(a) & np.isfinite(b)
+                ok &= bool(np.allclose(a[finite], b[finite],
+                                       atol=tol, rtol=tol))
+        ok &= (dev == 0.0) if exact else (dev <= tol)
+        ok &= int(r_s.accel_count) == int(g_s.accel_count)
+        return ok, dev
+
+    legs = {}
+    accels = {}
+    rng = np.random.RandomState(0)
+
+    for name in models:
+        cfg = zoo_config(name, "tiny")
+        model = build_model(cfg)                     # reference kernels, bf16
+        params0 = model.init(jax.random.PRNGKey(0), max_seq=seq)
+        toks = skewed_epoch(cfg.vocab_size, rng)
+        sampler = FCPRSampler({"tokens": toks}, batch_size=batch, seed=1)
+        host = [{k: jnp.asarray(v) for k, v in sampler(j).items()}
+                for j in range(steps)]
+
+        def drive(step_fn, init_fn, feed=lambda j: host[j]):
+            p = jax.tree.map(jnp.copy, params0)
+            s = init_fn(p)
+            ms = []
+            for j in range(steps):
+                s, p, m = step_fn(s, p, feed(j))
+                ms.append(jax.tree.map(np.asarray, m))
+            return s, p, {k: np.stack([m[k] for m in ms]) for k in ms[0]}
+
+        def drive_chunked(chunk_fn, init_fn, ring, k):
+            p = jax.tree.map(jnp.copy, params0)
+            s = init_fn(p)
+            outs = []
+            for c in range(steps // k):
+                s, p, ms = chunk_fn(s, p, ring.arrays, c * k)
+                outs.append(jax.tree.map(np.asarray, ms))
+            return s, p, {key: np.concatenate([o[key] for o in outs])
+                          for key in outs[0]}
+
+        # reference: the per-step engine
+        init_fn, step = make_train_step(model.loss_fn, rule, icfg,
+                                        lr_fn=lr_fn, donate=False)
+        ref = drive(step, init_fn)
+        accels[name] = int(ref[2]["accelerated"].sum())
+
+        ring = DeviceRing(sampler.epoch_arrays(), batch)
+        Ks = (1, K) if name == "transformer" else (K,)
+        for k in Ks:
+            cinit, chunk = make_chunked_train_step(
+                model.loss_fn, rule, icfg, chunk_steps=k, lr_fn=lr_fn,
+                donate=False)
+            got = drive_chunked(chunk, cinit, ring, k)
+            ok, dev = compare(ref, got, exact=True)
+            legs[f"{name}:chunked-K{k}"] = {"ok": ok, "max_param": dev}
+
+        if name != "transformer":
+            continue
+
+        # control: LR frozen at lr_fn(0.0) must DIFFER, or this matrix
+        # could not catch a dropped ψ̄ schedule on a transformer body
+        finit, fstep = make_train_step(model.loss_fn, rule, icfg,
+                                       lr_fn=lambda _: lr_fn(0.0),
+                                       donate=False)
+        frozen = drive(fstep, finit)
+        differs = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(ref[1]),
+                            jax.tree.leaves(frozen[1])))
+        legs["transformer:frozen-lr-differs"] = {"ok": differs,
+                                                 "max_param": None}
+
+        # sched composition: FCPR policy inside the scan, bit-exact
+        fcpr = FCPRSchedule()
+        cinit, chunk = make_chunked_train_step(
+            model.loss_fn, rule, icfg, chunk_steps=K, lr_fn=lr_fn,
+            donate=False, schedule=fcpr)
+        p = jax.tree.map(jnp.copy, params0)
+        s = cinit(p)
+        ss = fcpr.init(n_batches)
+        outs = []
+        for c in range(steps // K):
+            s, p, ss, ms = chunk(s, p, ss, ring.arrays, c * K)
+            outs.append(jax.tree.map(np.asarray, ms))
+        got = (s, p, {key: np.concatenate([o[key] for o in outs])
+                      for key in outs[0]})
+        ok, dev = compare(ref, got, exact=True)
+        legs[f"transformer:sched-fcpr-K{K}"] = {"ok": ok, "max_param": dev}
+
+        # hybrid engine on a (n, 1) data mesh: per-step vs fused chunked
+        mesh = make_host_mesh(model=1)
+        hinit, hstep = make_hybrid_step(model.loss_fn, rule, icfg, mesh,
+                                        lr_fn=lr_fn, donate=False)
+        hy = drive(hstep, hinit)
+        ring_m = DeviceRing(sampler.epoch_arrays(), batch, mesh=mesh)
+        cinit, chunk = make_chunked_hybrid_step(
+            model.loss_fn, rule, icfg, mesh, chunk_steps=K, lr_fn=lr_fn,
+            donate=False)
+        got = drive_chunked(chunk, cinit, ring_m, K)
+        ok, dev = compare(hy, got, exact=True)
+        legs[f"transformer:hybrid(n,1)-chunked-K{K}"] = {"ok": ok,
+                                                        "max_param": dev}
+
+    # kernel parity: the interpret build (real Pallas kernels, interpreter
+    # backend) vs the reference build — loss and grads within the numerics
+    # gate's f32 tolerances (grads get 10x headroom: they accumulate over
+    # the depth of the body).  f32 params on purpose: bf16 grads quantize
+    # at ~3e-3 ulp and would swamp the kernel deviation being measured
+    # (the numerics gate sweeps bf16 per-kernel separately).
+    kernels_by_model = {"transformer": ("flash_attention", "fused_xent"),
+                        "moe": ("flash_attention", "fused_xent"),
+                        "ssm": ("ssd_scan", "fused_xent")}
+    for name in models:
+        cfg = zoo_config(name, "tiny")
+        ref_m = build_model(cfg, param_dtype=jnp.float32)
+        int_m = build_model(cfg, kernels="interpret",
+                            param_dtype=jnp.float32)
+        params = ref_m.init(jax.random.PRNGKey(0), max_seq=seq)
+        toks = skewed_epoch(cfg.vocab_size, np.random.RandomState(7))
+        b = {"tokens": jnp.asarray(toks[:2])}
+        (l_r, _), g_r = jax.value_and_grad(ref_m.loss_fn,
+                                           has_aux=True)(params, b)
+        (l_i, _), g_i = jax.value_and_grad(int_m.loss_fn,
+                                           has_aux=True)(params, b)
+        tol = max(TOLERANCES[k]["float32"][0]
+                  for k in kernels_by_model[name])
+        l_dev = float(np.abs(np.asarray(l_r) - np.asarray(l_i)))
+        g_dev = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                        - np.asarray(b_, np.float32))))
+                    for a, b_ in zip(jax.tree.leaves(g_r),
+                                     jax.tree.leaves(g_i)))
+        legs[f"{name}:kernels-interpret-vs-ref"] = {
+            "ok": l_dev <= tol and g_dev <= 10 * tol,
+            "max_param": g_dev, "loss_dev": l_dev, "tol": tol}
+
+    ok = all(leg["ok"] for leg in legs.values())
+    if verbose:
+        for name, leg in legs.items():
+            print(f"  {name:38s} ok={leg['ok']} "
+                  f"max_param={leg['max_param']}")
+    return {"ok": ok, "devices": n_dev, "steps": steps, "K": K,
+            "accelerations": accels, "legs": legs}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "(0 = use whatever XLA_FLAGS already provides)")
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--chunk-steps", type=int, default=32)
+    ap.add_argument("--models", default="transformer,moe,ssm",
+                    help="comma-separated subset of the zoo")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.devices:
+        return _reexec_with_devices(args.devices, [
+            "--steps", str(args.steps),
+            "--chunk-steps", str(args.chunk_steps),
+            "--models", args.models,
+            *(["--verbose"] if args.verbose else [])])
+    r = run_zoo_parity(steps=args.steps, K=args.chunk_steps,
+                       verbose=args.verbose,
+                       models=tuple(args.models.split(",")))
+    bad = [n for n, leg in r["legs"].items() if not leg["ok"]]
+    print(f"zoo-parity devices={r['devices']} steps={r['steps']} "
+          f"K={r['K']} accelerations={r['accelerations']} "
+          f"legs={len(r['legs'])} failed={bad or 'none'} -> "
+          f"{'OK' if r['ok'] else 'FAIL'}")
+    if r["accelerations"].get("transformer", 1) == 0:
+        print("zoo-parity WARNING: subproblem never fired on transformer")
+        return 2
+    return 0 if r["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,8 +5,12 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import (ARCH_IDS, ZOO_MODELS, ZOO_TIERS, get_config,
+                           zoo_config)
+from repro.core import ISGDConfig
 from repro.models import build_model
+from repro.optim import momentum
+from repro.train import make_step_core
 
 KEY = jax.random.PRNGKey(0)
 
@@ -56,6 +60,38 @@ def test_reduced_decode_step(arch):
     assert logits.shape == (B, cfg.padded_vocab)
     assert bool(jnp.isfinite(logits).all())
     assert int(cache["t"]) == 2
+
+
+ZOO_CASES = [
+    pytest.param(m, t, marks=[pytest.mark.slow] if t == "base" else [],
+                 id=f"{m}-{t}")
+    for m in ZOO_MODELS for t in ZOO_TIERS
+]
+
+
+@pytest.mark.parametrize("model_name,tier", ZOO_CASES)
+def test_zoo_step_core(model_name, tier):
+    """One full ISGD forward+backward per zoo body through make_step_core
+    (the shared contract every engine wraps) — finite loss, f32 ψ stats,
+    gradient reaching every leaf.  ``base`` tiers are real single-host
+    configs (0.1–0.5B params) and run only under the ``slow`` marker."""
+    cfg = zoo_config(model_name, tier)
+    model = build_model(cfg)
+    B, S = (2, 32) if tier == "tiny" else (1, 16)
+    params = model.init(KEY, max_seq=S)
+    batch = {"tokens": jnp.clip(jnp.arange(B * S).reshape(B, S) % 97, 0,
+                                cfg.vocab_size - 1).astype(jnp.int32)}
+    icfg = ISGDConfig(n_batches=2, k_sigma=1.0, stop=2, zeta=0.01)
+    init_fn, step_fn = make_step_core(
+        model.loss_fn, momentum(0.9), icfg,
+        lr_fn=lambda p: jnp.asarray(0.05) + 0.0 * p)
+    state = init_fn(params)
+    state, params, m = jax.jit(step_fn)(state, params, batch)
+    assert m["loss"].dtype == jnp.float32
+    assert bool(jnp.isfinite(m["loss"]))
+    assert state.queue.buf.dtype == jnp.float32
+    for path, w in jax.tree_util.tree_flatten_with_path(params)[0]:
+        assert bool(jnp.all(jnp.isfinite(w))), path
 
 
 @pytest.mark.parametrize("arch", ["internlm2_1_8b", "mamba2_2_7b",

@@ -1,0 +1,24 @@
+"""Pallas-vs-reference numerics gate as a pytest surface.
+
+One test per (kernel, dtype, shape) cell of ``repro.kernels.numerics`` —
+the same matrix CI runs standalone (``python -m repro.kernels.numerics``);
+here each cell is an individually reportable/deselectable test, and the
+tolerance table lives in exactly one place (``numerics.TOLERANCES``).
+"""
+import pytest
+
+from repro.kernels.numerics import check_case, iter_cases
+
+CASES = list(iter_cases())
+
+
+@pytest.mark.parametrize(
+    "kernel,dtype,shape", CASES,
+    ids=[f"{k}-{d}-{'x'.join(str(s) for s in shape)}"
+         for k, d, shape in CASES])
+def test_kernel_matches_reference(kernel, dtype, shape):
+    r = check_case(kernel, dtype, shape)
+    assert r["ok"], (
+        f"{kernel} {dtype} {shape}: max_abs={r['max_abs']:.3e} "
+        f"max_rel={r['max_rel']:.3e} exceeds "
+        f"tol=({r['rtol']:g},{r['atol']:g})")

@@ -1,0 +1,84 @@
+"""Mixed-precision contract: bf16 step bodies, f32 ψ statistics.
+
+The SPC control limit (ψ̄ + kσ over the loss queue) and the ψ̄-driven LR
+schedule are the paper's decision machinery — if the loss scalar is
+computed in bf16, ``control.push``'s f32 cast can't restore the lost
+mantissa and the whole acceleration schedule quantises.  The contract
+(``models/transformer.lm_loss_fn`` + ``train/trainer.make_loss_and_grad``):
+the loss head computes in f32 and the trainer defensively upcasts, so the
+queue and every loss metric stay genuinely f32 no matter what dtype the
+step body runs in.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ZOO_MODELS, zoo_config
+from repro.core import ISGDConfig
+from repro.models import build_model
+from repro.optim import momentum
+from repro.train import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+ICFG = ISGDConfig(n_batches=2, k_sigma=1.0, stop=2, zeta=0.01)
+
+
+def _lr_fn(psi_bar):
+    return jnp.asarray(0.05) + 0.0 * psi_bar
+
+
+def _assert_f32_stats(state, metrics):
+    assert state.queue.buf.dtype == jnp.float32
+    assert state.queue.total.dtype == jnp.float32
+    assert state.queue.total_sq.dtype == jnp.float32
+    assert metrics["loss"].dtype == jnp.float32
+    assert metrics["psi_bar"].dtype == jnp.float32
+
+
+def test_queue_stays_f32_under_bf16_loss_fn():
+    """A loss_fn whose scalars come back bf16 (the regression: a bf16 step
+    body leaking its compute dtype into the loss head) must still produce
+    f32 queue statistics and f32 loss metrics."""
+    def loss_fn(params, batch):
+        pred = batch["x"].astype(jnp.bfloat16) @ params["w"]
+        loss = jnp.mean(
+            (pred - batch["y"].astype(jnp.bfloat16)) ** 2)    # bf16 scalar
+        assert loss.dtype == jnp.bfloat16
+        return loss, loss
+
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(4, 2), jnp.bfloat16)}
+    batch = {"x": jnp.asarray(rng.randn(8, 4), jnp.float32),
+             "y": jnp.asarray(rng.randn(8, 2), jnp.float32)}
+    init_fn, step = make_train_step(loss_fn, momentum(0.9), ICFG,
+                                    lr_fn=_lr_fn, donate=False)
+    state = init_fn(params)
+    for _ in range(3):
+        state, params, m = step(state, params, batch)
+    _assert_f32_stats(state, m)
+    assert bool(np.isfinite(np.asarray(m["loss"])))
+
+
+@pytest.mark.parametrize("name", ZOO_MODELS)
+def test_zoo_bf16_policy_keeps_f32_loss(name):
+    """The default zoo build is bf16 params / f32 loss head: params carry
+    bf16 leaves, yet the loss scalar is f32 *at the source* (not merely
+    upcast after the precision is gone) and the SPC queue stays f32."""
+    cfg = zoo_config(name, "tiny")
+    model = build_model(cfg)
+    params = model.init(KEY, max_seq=32)
+    assert any(a.dtype == jnp.bfloat16 for a in jax.tree.leaves(params))
+
+    toks = jnp.asarray(
+        np.random.RandomState(1).randint(0, cfg.vocab_size, size=(4, 32)),
+        jnp.int32)
+    loss, aux = model.loss_fn(params, {"tokens": toks})
+    assert loss.dtype == jnp.float32
+    assert aux.dtype == jnp.float32
+
+    init_fn, step = make_train_step(model.loss_fn, momentum(0.9), ICFG,
+                                    lr_fn=_lr_fn, donate=False)
+    state = init_fn(params)
+    state, params, m = step(state, params, {"tokens": toks})
+    _assert_f32_stats(state, m)

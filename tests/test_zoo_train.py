@@ -1,0 +1,69 @@
+"""Zoo bodies through the ISGD engines: quick chunked-parity regressions.
+
+The full matrix (ψ̄-lag control leg, sched composition, hybrid engine,
+kernel leg, K∈{1,32}) lives in ``repro.train.zoo_parity`` and runs as a
+CI step; these are the fast per-commit versions — per-step vs fused
+chunked scan must stay bit-exact on every zoo step body, accelerations
+included.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ZOO_MODELS, zoo_config
+from repro.core import ISGDConfig
+from repro.data import DeviceRing, FCPRSampler
+from repro.models import build_model
+from repro.optim import momentum
+from repro.train import make_chunked_train_step, make_train_step
+
+STEPS, K, N_BATCHES, BATCH, SEQ = 8, 4, 2, 4, 32
+
+
+def _skewed_tokens(vocab, rng):
+    """Batch 0 uniform-random (hard), batch 1 repeated 4-grams (easy) —
+    skewed enough that the subproblem fires within an epoch or two."""
+    hard = rng.randint(0, vocab, size=(BATCH, SEQ))
+    easy = np.tile(rng.randint(0, vocab, size=(1, 4)), (BATCH, SEQ // 4))
+    return np.concatenate([hard, easy], 0).astype(np.int32)
+
+
+@pytest.mark.parametrize("name", ZOO_MODELS)
+def test_zoo_chunked_parity(name):
+    cfg = zoo_config(name, "tiny")
+    model = build_model(cfg)
+    params0 = model.init(jax.random.PRNGKey(0), max_seq=SEQ)
+    toks = _skewed_tokens(cfg.vocab_size, np.random.RandomState(0))
+    sampler = FCPRSampler({"tokens": toks}, batch_size=BATCH, seed=1)
+    icfg = ISGDConfig(n_batches=N_BATCHES, k_sigma=1.0, stop=2, zeta=0.01)
+    rule = momentum(0.9)
+    lr_fn = lambda p: jnp.asarray(0.05) + 0.005 * jnp.minimum(p, 1.0)  # noqa: E731
+
+    init_fn, step = make_train_step(model.loss_fn, rule, icfg,
+                                    lr_fn=lr_fn, donate=False)
+    p = jax.tree.map(jnp.copy, params0)
+    s = init_fn(p)
+    losses = []
+    for j in range(STEPS):
+        b = {k: jnp.asarray(v) for k, v in sampler(j).items()}
+        s, p, m = step(s, p, b)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), losses
+
+    ring = DeviceRing(sampler.epoch_arrays(), BATCH)
+    cinit, chunk = make_chunked_train_step(model.loss_fn, rule, icfg,
+                                           chunk_steps=K, lr_fn=lr_fn,
+                                           donate=False)
+    pc = jax.tree.map(jnp.copy, params0)
+    sc = cinit(pc)
+    closs = []
+    for c in range(STEPS // K):
+        sc, pc, ms = chunk(sc, pc, ring.arrays, c * K)
+        closs.extend(np.asarray(ms["loss"]).tolist())
+
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(pc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(losses, np.float32),
+                                  np.asarray(closs, np.float32))
+    assert int(s.accel_count) == int(sc.accel_count)
