@@ -1,0 +1,215 @@
+"""Fault-recovery study: elastic async-PS pool under injected worker faults.
+
+ISSUE 7's end-state check: run the lenet-8x8 async engine twice on the same
+global FCPR cycle —
+
+  * **anchor** — the fault-free elastic pool (N workers, bounded
+    staleness);
+  * **faulted** — the same pool under a seeded :class:`repro.fault
+    .FaultPlan`: 1 worker crash + 1 worker hang (hang > heartbeat deadline
+    ⇒ evicted mid-sleep) drawn from the middle of the run, plus a one-shot
+    corrupt push and a one-shot transient push failure on a surviving
+    worker (absorbed by checksum-verify + bounded retry)
+
+— and report **time-to-target**: the wall time at which each run's
+trailing-epoch mean ψ̄ first reaches a target fixed from the anchor's
+mid-run trajectory.  The recovery claim is the ratio: eviction +
+re-striping keeps the faulted pool's time-to-target within a bounded
+factor of the fault-free pool (the run *completes* and keeps converging on
+survivors instead of deadlocking or failing).
+
+Writes ``BENCH_fault_recovery.json`` (checked in at the repo root) with the
+eviction/crash event log embedded.  ``--smoke`` is the CI mode: reduced
+steps under both matrix device counts, artifact uploaded.
+
+  PYTHONPATH=src python benchmarks/bench_fault_recovery.py
+  PYTHONPATH=src python benchmarks/bench_fault_recovery.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def _setup(args):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.paper_cnns import CNNConfig, ConvSpec
+    from repro.core import ISGDConfig
+    from repro.data import FCPRSampler, make_classification
+    from repro.models import cnn_loss_fn, init_cnn
+    from repro.optim import momentum
+
+    cfg = CNNConfig(name="lenet-8x8", image_size=8, channels=1,
+                    num_classes=10,
+                    convs=(ConvSpec(4, 3, pool=2), ConvSpec(8, 3, pool=2)),
+                    hidden=(24,))
+    data = make_classification(0, args.batch * args.n_batches,
+                               cfg.image_size, cfg.channels, 10,
+                               noise=0.6, class_spread=2.0)
+    sampler = FCPRSampler(data, batch_size=args.batch, seed=1)
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.5, stop=3,
+                      zeta=0.02)
+    loss_fn = lambda p, b: cnn_loss_fn(p, cfg, b)
+    # ψ̄-driven LR so the async one-step queue lag is on the measured path
+    lr_fn = lambda pb: jnp.asarray(0.05) * jnp.clip(pb / 2.3, 0.5, 1.0)
+    params0 = init_cnn(jax.random.PRNGKey(0), cfg)
+    return loss_fn, momentum(0.9), icfg, lr_fn, params0, sampler
+
+
+def _make_plan(args):
+    """Seeded plan: 1 crash + 1 hang (> deadline ⇒ evicted mid-sleep) in
+    the middle of the run, plus a corrupt and a transient push on a
+    SURVIVING worker so the checksum-reject/retry path is on the measured
+    run too."""
+    from repro.fault import FaultEvent, FaultPlan
+
+    base = FaultPlan.random(args.workers, args.steps // args.workers,
+                            seed=args.seed, crashes=1, hangs=1,
+                            hang_seconds=args.hang)
+    doomed = {e.worker for e in base.events}
+    survivor = next(w for w in range(args.workers) if w not in doomed)
+    events = list(base.events) + [
+        FaultEvent(kind="corrupt", worker=survivor, step=1),
+        FaultEvent(kind="transient", worker=survivor, step=2),
+    ]
+    return FaultPlan(events)
+
+
+def _trailing_psi(records, n_b: int):
+    """-> list of (wall, trailing-n_b mean ψ̄) per push, skipping warm-up."""
+    out = []
+    for i in range(n_b, len(records) + 1):
+        window = records[i - n_b:i]
+        out.append((window[-1]["wall"],
+                    sum(r["psi_bar"] for r in window) / n_b))
+    return out
+
+
+def _time_to(series, target: float):
+    for wall, psi in series:
+        if psi <= target:
+            return wall
+    return None
+
+
+def _cell(args, setup, *, faults=None, label: str):
+    from repro.distributed import AsyncPSCoordinator
+    from repro.fault import NO_FAULTS
+
+    loss_fn, rule, icfg, lr_fn, params0, sampler = setup
+    coord = AsyncPSCoordinator(
+        loss_fn, rule, icfg, workers=args.workers,
+        max_staleness=args.staleness, lr_fn=lr_fn, elastic=True,
+        deadline_s=args.deadline, faults=faults or NO_FAULTS,
+        verify_pushes=faults is not None)
+    coord.warmup(params0, sampler)
+    t0 = time.perf_counter()
+    _, state, records = coord.run(params0, sampler, args.steps)
+    dt = time.perf_counter() - t0
+    series = _trailing_psi(records, sampler.n_batches)
+    return {"cell": label, "workers": args.workers,
+            "max_staleness": args.staleness, "pushes": len(records),
+            "wall_s": dt, "updates_per_s": len(records) / dt,
+            "final_psi_bar": series[-1][1] if series else None,
+            "accelerated": int(state.accel_count),
+            "events": coord.events, "series": series}
+
+
+def run(args) -> dict:
+    import jax
+
+    setup = _setup(args)
+    anchor = _cell(args, setup, label="anchor")
+    plan = _make_plan(args)
+    faulted = _cell(args, setup, faults=plan, label="faulted")
+
+    # target: the anchor's trailing ψ̄ halfway through its own push stream —
+    # comfortably reachable by the faulted run even though it loses ~40% of
+    # its pushes to the two evictions
+    mid = anchor["series"][len(anchor["series"]) // 2]
+    target = mid[1]
+    t_anchor = _time_to(anchor["series"], target)
+    t_faulted = _time_to(faulted["series"], target)
+    for c in (anchor, faulted):
+        c.pop("series")
+        c["time_to_target_s"] = {"anchor": t_anchor,
+                                 "faulted": t_faulted}[c["cell"]]
+    overhead = (t_faulted / t_anchor
+                if t_faulted is not None and t_anchor else None)
+    evicted = [e["worker"] for e in faulted["events"]
+               if e["event"] == "evict"]
+    print(f"anchor : {anchor['pushes']} pushes in {anchor['wall_s']:.2f}s, "
+          f"time_to_target={t_anchor and round(t_anchor, 3)}s")
+    print(f"faulted: {faulted['pushes']} pushes in "
+          f"{faulted['wall_s']:.2f}s, "
+          f"time_to_target={t_faulted and round(t_faulted, 3)}s, "
+          f"evicted workers {evicted}")
+    print(f"overhead ratio (faulted/anchor time-to-target): "
+          f"{overhead and round(overhead, 2)}")
+    return {
+        "config": {"model": "lenet-8x8", "batch": args.batch,
+                   "n_batches": args.n_batches, "steps": args.steps,
+                   "workers": args.workers, "max_staleness": args.staleness,
+                   "deadline_s": args.deadline, "hang_s": args.hang,
+                   "seed": args.seed, "devices": len(jax.devices())},
+        "plan": [repr(e) for e in plan.events],
+        "target_psi_bar": target,
+        "overhead_ratio": overhead,
+        "cells": [anchor, faulted],
+        "note": ("time-to-target compares the fault-free elastic pool with "
+                 "the same pool losing 2/4 workers mid-run (crash + "
+                 "hang-past-deadline): eviction + FCPR re-striping keeps "
+                 "the run converging on survivors.  Worker threads share "
+                 "this host's cores, so wall ratios measure recovery "
+                 "overhead, not parallel speedup."),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=960,
+                    help="total server pushes per cell (fault-free count; "
+                         "the faulted cell completes fewer).  Long enough "
+                         "that the fixed recovery cost (~deadline_s of "
+                         "stall before eviction) amortizes visibly")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-batches", type=int, default=8, dest="n_batches")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--staleness", type=int, default=1)
+    ap.add_argument("--deadline", type=float, default=1.0,
+                    help="heartbeat deadline (s); the injected hang must "
+                         "exceed it to trigger eviction")
+    ap.add_argument("--hang", type=float, default=3.0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: reduced steps, shorter deadline/hang")
+    ap.add_argument("--out", default="BENCH_fault_recovery.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.steps = min(args.steps, 96)
+        args.deadline = min(args.deadline, 0.6)
+        args.hang = min(args.hang, 2.0)
+
+    payload = {"mode": "smoke" if args.smoke else "full", "results": run(args)}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out}")
+    try:
+        from common import save_json
+        save_json("fault_recovery", payload)
+    except Exception:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,39 @@ Staleness semantics (pinned by tests/test_async_ps.py):
     ψ̄-dependent loss-driven LR: workers read ψ̄ from the pulled queue
     *before* their loss reaches the server — the same one-step lag the
     per-step and fused engines carry (Alg.1 line 19).
+
+Elasticity contract (ISSUE 7 — eviction, re-striping, durability):
+
+  * **Eviction vs the SSP bound.** With ``elastic=True`` a worker that
+    misses the heartbeat deadline while blocking the SSP clock — or whose
+    own step raises — is *evicted*: removed from the gate's ``min()`` (so
+    survivors advance), fenced at the server (late pushes rejected via
+    :class:`~repro.distributed.async_ps.errors.WorkerEvicted`).  The
+    staleness bound is preserved through membership change: the clock's
+    ``min()`` ranges over a *shrinking* set, so no surviving worker ever
+    observes more staleness than the pre-eviction bound
+    ``(2·max_staleness + 1)·(workers − 1)`` allowed.
+  * **Re-striping vs "one ψ window = one epoch".** The evicted worker's
+    FCPR shard is re-striped across the M survivors
+    (:meth:`~repro.distributed.async_ps.coordinator.ShardedFeed.restripe`,
+    which drops the old ``n_batches % n_workers == 0`` requirement).  For
+    up to one epoch after the membership change the aggregate push stream
+    visits some batches twice and others late, so the ψ window temporarily
+    means "≈ one epoch's worth of pushes" rather than exactly one pass;
+    the window re-aligns once the new striding completes a cycle.  The
+    control chart tolerates this the same way it tolerates staleness — ψ̄
+    and σ are running statistics, not per-batch bookkeeping.
+  * **Checkpoints commit at pushes.**  ``ParamServer.engine_snapshot`` /
+    ``load_snapshot`` (and the ``checkpoint_fn`` hook, invoked under the
+    server lock) capture params, base, ψ queue, version and the per-worker
+    push clocks together, so a resumed run replays exactly the steps whose
+    pushes never landed — with one worker this resume is **bit-exact**
+    (``repro.train.resume_parity``).
+  * Failures that cannot be absorbed (non-elastic stall, last survivor
+    crashing, retry exhaustion) surface as
+    :class:`~repro.distributed.async_ps.errors.WorkerFailure` carrying the
+    worker thread's formatted traceback, with the original exception
+    chained as ``__cause__``.
 """
 from __future__ import annotations
 
@@ -49,12 +82,18 @@ _EXPORTS = {
     "StalenessGate": "repro.distributed.async_ps.coordinator",
     "ShardedFeed": "repro.distributed.async_ps.coordinator",
     "records_to_trainlog": "repro.distributed.async_ps.coordinator",
+    "snapshot_engine_kwargs": "repro.distributed.async_ps.coordinator",
+    "snapshot_from_checkpoint": "repro.distributed.async_ps.coordinator",
     "run_async_parity": "repro.distributed.async_ps.parity",
     "ParamServer": "repro.distributed.async_ps.server",
     "Snapshot": "repro.distributed.async_ps.server",
     "Decision": "repro.distributed.async_ps.server",
     "Worker": "repro.distributed.async_ps.worker",
     "make_worker_fns": "repro.distributed.async_ps.worker",
+    "WorkerStalled": "repro.distributed.async_ps.errors",
+    "WorkerEvicted": "repro.distributed.async_ps.errors",
+    "PushRejected": "repro.distributed.async_ps.errors",
+    "WorkerFailure": "repro.distributed.async_ps.errors",
 }
 
 __all__ = list(_EXPORTS)

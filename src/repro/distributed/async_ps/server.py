@@ -25,18 +25,39 @@ The two worker round-trips per step (``observe`` then ``push``) mirror the
 two places the synchronous ``isgd_step`` touches control state: the queue
 push + limit *before* the conservative subproblem, and the counter/param
 commit after it.
+
+Robustness (ISSUE 7): the server is also the engine's durability and
+integrity point —
+
+  * ``engine_snapshot``/``load_snapshot`` capture/restore the full server
+    state (params, base, ψ queue, version/iteration counters AND the
+    per-worker push clocks) under the lock, so a checkpoint taken between
+    pushes is *crash-consistent*: pushes are the commit point, and a resumed
+    run replays exactly the steps whose pushes never landed.  A
+    ``checkpoint_fn`` wired at construction is invoked (still under the
+    lock) every ``checkpoint_every`` versions;
+  * ``verify_pushes=True`` makes ``push`` recompute the worker-supplied
+    content checksum over the received trees and reject mismatches with
+    :class:`~repro.distributed.async_ps.errors.PushRejected` — a delta
+    corrupted in transit never reaches canonical state (the worker's
+    bounded retry resends it clean);
+  * ``mark_evicted(wid)`` fences a worker the coordinator evicted: its
+    late pushes raise
+    :class:`~repro.distributed.async_ps.errors.WorkerEvicted` instead of
+    folding stale state into the model.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import List, NamedTuple, Optional
+from typing import Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ISGDConfig, ISGDState, control
 from repro.core.reduce import StalenessReduce
+from repro.distributed.async_ps.errors import PushRejected, WorkerEvicted
 
 
 # Module-level jits (shared cache): per-instance closures would re-trace for
@@ -79,7 +100,9 @@ class ParamServer:
 
     def __init__(self, params, base, isgd_cfg: ISGDConfig, *,
                  reduce_ctx: Optional[StalenessReduce] = None,
-                 inconsistent: bool = True):
+                 inconsistent: bool = True, verify_pushes: bool = False,
+                 checkpoint_fn: Optional[Callable[[dict], None]] = None,
+                 checkpoint_every: int = 0):
         self._lock = threading.Lock()
         self._params = params
         self._base = base
@@ -87,10 +110,15 @@ class ParamServer:
         self._cfg = isgd_cfg
         self._ctx = reduce_ctx if reduce_ctx is not None else StalenessReduce()
         self._inconsistent = inconsistent
+        self._verify = verify_pushes
+        self._ckpt_fn = checkpoint_fn
+        self._ckpt_every = checkpoint_every
         self._version = 0
         self._iter = 0
         self._accel_count = 0
         self._sub_iters = 0
+        self._pushed: Dict[int, int] = {}      # per-worker SSP push clocks
+        self._evicted: set[int] = set()
         self._k_sigma = jnp.asarray(isgd_cfg.k_sigma, jnp.float32)
         self._t0 = time.perf_counter()
         self.records: List[dict] = []
@@ -122,15 +150,34 @@ class ParamServer:
         return Decision(limit, psi_bar, psi_std, accelerated)
 
     def push(self, snap: Snapshot, final_params, final_base, *,
-             worker: int, metrics: dict) -> int:
+             worker: int, metrics: dict, checksum: Optional[str] = None) -> int:
         """Fold a worker's finished step into the canonical state.
 
         Returns the staleness τ = versions applied between the worker's pull
         and this push.  τ == 0 applies the worker's trees verbatim (exact —
         see module docstring); τ > 0 applies ``old + w(τ)·(final − snap)``
         to params and base state alike.
+
+        ``checksum`` (when the server verifies pushes) is the worker's
+        content checksum of ``(final_params, final_base)`` computed *before*
+        transit; a mismatch on arrival raises :class:`PushRejected` and
+        nothing is applied.  Pushes from evicted workers raise
+        :class:`WorkerEvicted` (also applying nothing).
         """
+        if self._verify and checksum is not None:
+            # recompute OUTSIDE the lock: checksumming the whole delta is
+            # the expensive part and must not serialize healthy pushes
+            from repro.train.checkpoints import tree_checksum
+            got = tree_checksum((final_params, final_base))
+            if got != checksum:
+                raise PushRejected(
+                    f"worker {worker}: delta checksum mismatch on arrival "
+                    f"(sent {checksum}, received {got}) — payload corrupted "
+                    f"in transit; rejecting the push")
         with self._lock:
+            if worker in self._evicted:
+                raise WorkerEvicted(
+                    f"worker {worker} push rejected: worker was evicted")
             tau = self._version - snap.version
             assert tau >= 0, (tau, self._version, snap.version)
             if tau == 0:
@@ -145,10 +192,55 @@ class ParamServer:
             self._iter += 1
             self._accel_count += int(metrics.get("accelerated", False))
             self._sub_iters += int(metrics.get("sub_iters", 0))
+            self._pushed[worker] = self._pushed.get(worker, 0) + 1
             self.records.append(dict(
                 metrics, worker=worker, tau=tau, version=self._version,
                 wall=time.perf_counter() - self._t0))
+            if (self._ckpt_fn is not None and self._ckpt_every
+                    and self._version % self._ckpt_every == 0):
+                # under the lock on purpose: the snapshot must pair the
+                # just-applied push with its clock (crash consistency)
+                self._ckpt_fn(self._snapshot_locked())
             return tau
+
+    # -- elasticity / durability -------------------------------------------
+    def mark_evicted(self, worker: int) -> None:
+        """Fence an evicted worker: its in-flight push (pulled before the
+        eviction) must not fold stale state into the canonical params."""
+        with self._lock:
+            self._evicted.add(worker)
+
+    def _snapshot_locked(self) -> dict:
+        return dict(params=self._params, base=self._base, queue=self._queue,
+                    version=self._version, iter=self._iter,
+                    accel_count=self._accel_count, sub_iters=self._sub_iters,
+                    pushed=dict(self._pushed))
+
+    def engine_snapshot(self) -> dict:
+        """Crash-consistent copy of everything a resumed run needs: params,
+        base, ψ queue, counters, and the per-worker push clocks (jax arrays
+        are immutable, so sharing references under the lock is race-free)."""
+        with self._lock:
+            return self._snapshot_locked()
+
+    def load_snapshot(self, snap: dict) -> None:
+        """Restore a checkpointed server (inverse of ``engine_snapshot``).
+        Worker clocks resume from ``snap['pushed']``: a step whose push
+        never landed is replayed in full — pushes are the commit point."""
+        with self._lock:
+            self._params = snap["params"]
+            self._base = snap["base"]
+            self._queue = snap["queue"]
+            self._version = int(snap["version"])
+            self._iter = int(snap["iter"])
+            self._accel_count = int(snap["accel_count"])
+            self._sub_iters = int(snap["sub_iters"])
+            self._pushed = {int(w): int(n)
+                            for w, n in snap.get("pushed", {}).items()}
+
+    def pushed_clocks(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self._pushed)
 
     # -- results ------------------------------------------------------------
     @property

@@ -19,15 +19,27 @@ queue push + limit (``ParamServer.observe``) and the commit
 the :class:`~repro.core.reduce.StalenessReduce` context wraps every
 ``loss_and_grad`` as the identity, so the subproblem ``while_loop`` trips on
 the worker's own values with no collectives inside it.
+
+Robustness (ISSUE 7): the loop carries the fault-injection hooks
+(``FaultPlan.before_step`` / ``slow_factor`` / ``on_transit``, all no-ops
+by default), heartbeats the gate between its server round-trips so long
+healthy steps never trip the stall deadline, retries rejected/transient
+pushes with exponential backoff, and — on a real failure — captures the
+formatted traceback before the thread dies so the coordinator can re-raise
+it with the original frames attached.
 """
 from __future__ import annotations
 
+import time
+import traceback
 from typing import Callable
 
 import jax
 
 from repro.core import ISGDConfig, control, solve_subproblem
 from repro.core.reduce import ReduceCtx, StalenessReduce
+from repro.distributed.async_ps.errors import (PushRejected, WorkerEvicted)
+from repro.fault.plan import NO_FAULTS, FaultPlan, TransientPushError
 from repro.optim.base import UpdateRule
 from repro.train.trainer import make_loss_and_grad
 
@@ -64,54 +76,108 @@ class Worker:
 
     Per local step k: wait at the bounded-staleness gate, pull a snapshot,
     ``propose``, ``observe`` (server-side SPC verdict), optionally solve the
-    subproblem against the server's limit, ``push``.  Exceptions abort the
-    gate so sibling workers unblock instead of deadlocking.
+    subproblem against the server's limit, ``push`` (with bounded retry when
+    the server verifies checksums).  A failing step captures its traceback
+    and either self-evicts (elastic gate, peers survive) or aborts the gate
+    so sibling workers unblock instead of deadlocking.
+
+    ``start_step`` is the resume point: a worker restored from a checkpoint
+    continues at its own SSP push clock (pushes are the commit point — a
+    step whose push never landed is replayed in full).
     """
 
     def __init__(self, wid: int, server, feed: Callable, fns, gate,
-                 steps: int):
+                 steps: int, *, start_step: int = 0,
+                 faults: FaultPlan = NO_FAULTS, push_retries: int = 3,
+                 backoff_s: float = 0.05, verify_pushes: bool = False):
         self.wid = wid
         self.server = server
         self.feed = feed                      # k -> device batch dict
         self.propose, self.accelerate = fns
         self.gate = gate
         self.steps = steps
+        self.start_step = start_step
+        self.faults = faults
+        self.push_retries = push_retries
+        self.backoff_s = backoff_s
+        self.verify_pushes = verify_pushes
         self.error = None
+        self.error_tb = None                  # formatted worker-thread frames
+        self.evicted = False
 
     def run(self) -> None:
         try:
-            for k in range(self.steps):
+            for k in range(self.start_step, self.steps):
                 self.gate.start(self.wid, k)
+                self.faults.before_step(self.wid, k)
+                t0 = time.perf_counter()
                 self._step(k)
+                slow = self.faults.slow_factor(self.wid, k)
+                if slow > 1.0:
+                    time.sleep((time.perf_counter() - t0) * (slow - 1.0))
                 self.gate.finish(self.wid)
+        except WorkerEvicted:
+            # benign unwind: the coordinator already recorded the eviction,
+            # re-striped the shard, and fenced this worker's pushes
+            self.evicted = True
         except BaseException as e:            # noqa: BLE001 — must unblock peers
             self.error = e
-            self.gate.abort(e)
+            self.error_tb = traceback.format_exc()
+            self.evicted = self.gate.leave(self.wid, e)
 
     def _step(self, k: int) -> None:
         batch = self.feed(k)
         snap = self.server.pull()
         params1, base1, loss, aux, lr = self.propose(
             snap.params, snap.base, snap.queue, batch)
+        self.gate.heartbeat(self.wid)         # device work done; still alive
         d = self.server.observe(loss)
         if d.accelerated:
             params2, used = self.accelerate(params1, batch, d.limit, loss, lr)
             used = int(used)
+            self.gate.heartbeat(self.wid)
         else:
             params2, used = params1, 0
         try:
             aux_val = float(aux)              # scalar aux by repo convention
         except (TypeError, ValueError):
             aux_val = None
-        self.server.push(
-            snap, params2, base1, worker=self.wid,
-            metrics={
-                "loss": float(loss),
-                "aux": aux_val,
-                "psi_bar": float(d.psi_bar),
-                "psi_std": float(d.psi_std),
-                "limit": float(d.limit),
-                "accelerated": bool(d.accelerated),
-                "sub_iters": used,
-                "lr": float(lr),
-            })
+        self._push(k, snap, params2, base1, metrics={
+            "loss": float(loss),
+            "aux": aux_val,
+            "psi_bar": float(d.psi_bar),
+            "psi_std": float(d.psi_std),
+            "limit": float(d.limit),
+            "accelerated": bool(d.accelerated),
+            "sub_iters": used,
+            "lr": float(lr),
+        })
+
+    def _push(self, k: int, snap, params2, base1, *, metrics: dict) -> None:
+        """Push with integrity checksum + bounded retry.
+
+        The checksum is computed over the worker's *pristine* trees;
+        ``faults.on_transit`` may then corrupt/fail the payload (simulating
+        the transport).  A verifying server rejects a corrupted arrival
+        (:class:`PushRejected`) and the retry resends the clean original, so
+        a transient corruption costs one round-trip, never model quality.
+        """
+        checksum = None
+        if self.verify_pushes:
+            from repro.train.checkpoints import tree_checksum
+            checksum = tree_checksum((params2, base1))
+        last = None
+        for attempt in range(self.push_retries + 1):
+            if attempt:
+                time.sleep(self.backoff_s * 2 ** (attempt - 1))
+            try:
+                send_p, send_b = self.faults.on_transit(
+                    self.wid, k, (params2, base1))
+                self.server.push(snap, send_p, send_b, worker=self.wid,
+                                 metrics=metrics, checksum=checksum)
+                return
+            except (PushRejected, TransientPushError) as e:
+                last = e
+        raise RuntimeError(
+            f"worker {self.wid}: push for local step {k} failed after "
+            f"{self.push_retries + 1} attempts") from last

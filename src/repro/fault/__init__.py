@@ -1,0 +1,31 @@
+"""Deterministic fault injection (``FaultPlan``) for the async-PS engine.
+
+See ``repro.fault.plan`` for the event model and
+``repro.distributed.async_ps`` for where the hooks land.  Everything is
+importable lazily so ``python -m`` entry points can set XLA flags before
+jax initializes.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "FaultEvent": "repro.fault.plan",
+    "FaultPlan": "repro.fault.plan",
+    "NO_FAULTS": "repro.fault.plan",
+    "InjectedCrash": "repro.fault.plan",
+    "TransientPushError": "repro.fault.plan",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(_EXPORTS)

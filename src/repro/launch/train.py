@@ -50,6 +50,18 @@ Two input/dispatch accelerators compose with the synchronous engines
     ``repro.sched`` package doc).  Omitting the flag keeps the hard-wired
     FCPR paths.
 
+Fault tolerance (ISSUE 7): ``--checkpoint-dir``/``--checkpoint-every``
+write crash-consistent full-engine checkpoints (atomic, checksummed .npz
+covering params, optimizer base, ψ queue, sched state, step cursor, and —
+async-ps — the server version + per-worker SSP push clocks); ``--resume``
+restores the newest one and continues the uninterrupted trajectory
+bit-exactly (``repro.train.resume_parity`` proves it per engine).  The
+async-ps engine additionally takes ``--elastic`` (evict deadline-missing/
+crashed workers, re-stripe their FCPR shard across survivors),
+``--deadline``, ``--fault-plan`` (deterministic fault injection,
+``repro.fault``) and ``--verify-pushes`` (checksum-reject corrupt deltas,
+bounded retry).
+
 Model selection: ``--arch`` names an assigned architecture config
 (``repro.configs``, usually with ``--reduced``); ``--model
 transformer|moe|ssm`` picks the ``paper_transformer`` zoo family instead
@@ -117,26 +129,33 @@ def ring_epoch(cfg, sampler, batch_size: int):
     return epoch
 
 
-def _drive_chunks(jchunk, state, params, ring, steps: int, k: int):
-    """Run ``steps`` (rounded up to whole chunks) through a fused chunk fn,
-    printing the last step of each chunk.  Returns (state, total_steps)."""
-    n_chunks = -(-steps // k)
-    for c in range(n_chunks):
-        state, params, ms = jchunk(state, params, ring.arrays, c * k)
-        print(f"step {(c+1)*k:4d} loss={float(ms['loss'][-1]):.4f} "
+def _drive_chunks(jchunk, state, params, ring, steps: int, k: int, *,
+                  start: int = 0, ckpt=None):
+    """Run from global step ``start`` to ``steps`` (rounded up to whole
+    chunks) through a fused chunk fn, printing the last step of each chunk.
+    ``start`` may sit mid-chunk relative to the K grid — ``chunk_fn`` takes
+    an arbitrary ``j0`` (what makes resume-from-checkpoint possible).
+    Returns (state, total_steps)."""
+    j = start
+    while j < steps:
+        state, params, ms = jchunk(state, params, ring.arrays, j)
+        j += k
+        print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
               f"limit={float(ms['limit'][-1]):.4f} "
               f"accel={bool(ms['accelerated'][-1])}")
-    return state, n_chunks * k
+        if ckpt is not None:
+            ckpt.maybe_save(j, params=params, state=state)
+    return state, j
 
 
 def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
-                     k: int):
+                     k: int, *, start: int = 0, ckpt=None):
     """Drive a scheduled engine (per-step when ``k == 1``, fused chunks
     otherwise), printing the last step of each dispatch group including the
     policy's realized batch pick.  Returns (state, total_steps)."""
     if k == 1:
-        for j in range(steps):
+        for j in range(start, steps):
             state, params, sched_state, m = jfn(state, params, sched_state,
                                                 ring.arrays, j)
             if (j + 1) % 5 == 0 or j == 0:
@@ -145,19 +164,56 @@ def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
                       f"psi_bar={float(m['psi_bar']):.4f} "
                       f"limit={float(m['limit']):.4f} "
                       f"accel={bool(m['accelerated'])}")
+            if ckpt is not None:
+                ckpt.maybe_save(j + 1, params=params, state=state,
+                                sched_state=sched_state)
         return state, steps
-    n_chunks = -(-steps // k)
-    for c in range(n_chunks):
+    j = start
+    while j < steps:
         state, params, sched_state, ms = jfn(state, params, sched_state,
-                                             ring.arrays, c * k)
+                                             ring.arrays, j)
+        j += k
         visits = np.bincount(np.asarray(ms["batch_idx"]),
                              minlength=ring.n_batches)
-        print(f"step {(c+1)*k:4d} loss={float(ms['loss'][-1]):.4f} "
+        print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
               f"limit={float(ms['limit'][-1]):.4f} "
               f"accel={bool(ms['accelerated'][-1])} "
               f"visits={visits.tolist()}")
-    return state, n_chunks * k
+        if ckpt is not None:
+            ckpt.maybe_save(j, params=params, state=state,
+                            sched_state=sched_state)
+    return state, j
+
+
+def _make_checkpointer(args):
+    """``--checkpoint-dir``/``--checkpoint-every`` → a ``Checkpointer`` (or
+    None when checkpointing is off)."""
+    if not args.checkpoint_dir:
+        if args.resume:
+            raise SystemExit("--resume needs --checkpoint-dir")
+        return None
+    from repro.train.checkpoints import Checkpointer
+    return Checkpointer(args.checkpoint_dir, every=args.checkpoint_every)
+
+
+def _maybe_resume(args, ckpt, *, params_like, state_like, sched_like=None):
+    """``--resume``: restore the newest complete checkpoint in the directory
+    (atomic saves guarantee completeness) against the freshly initialized
+    templates.  Returns the ``EngineCheckpoint`` or None."""
+    if not (args.resume and ckpt is not None):
+        return None
+    from repro.train.checkpoints import restore_engine
+    latest = ckpt.latest()
+    if latest is None:
+        print(f"resume: no checkpoint under {ckpt.directory!r}; "
+              f"starting fresh")
+        return None
+    ck = restore_engine(latest, params_like=params_like,
+                        state_like=state_like, sched_like=sched_like)
+    ckpt.mark(ck.step)
+    print(f"resume: restored {latest!r} at step {ck.step}")
+    return ck
 
 
 def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
@@ -216,6 +272,8 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
             schedule=schedule)
     state = init_fn(params)
     s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
+    ckpt = _make_checkpointer(args)
+    start = 0
 
     with mesh, ctx:
         state = jax.device_put(state, s_sh)
@@ -224,11 +282,23 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
             ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
                               args.batch, mesh=mesh, relayout=not tp)
             sched_state = schedule.init(icfg.n_batches)
+            ck = _maybe_resume(args, ckpt, params_like=params,
+                               state_like=state, sched_like=sched_state)
+            if ck is not None:
+                params = jax.device_put(ck.params, p_sh)
+                state = jax.device_put(ck.state, s_sh)
+                sched_state, start = ck.sched_state, ck.step
             t0 = time.perf_counter()
             state, steps = _drive_scheduled(jstep, state, params,
                                             sched_state, ring, args.steps,
-                                            args.chunk_steps)
-            return state, time.perf_counter() - t0, steps
+                                            args.chunk_steps, start=start,
+                                            ckpt=ckpt)
+            return state, time.perf_counter() - t0, steps - start
+        ck = _maybe_resume(args, ckpt, params_like=params, state_like=state)
+        if ck is not None:
+            params = jax.device_put(ck.params, p_sh)
+            state = jax.device_put(ck.state, s_sh)
+            start = ck.step
         if args.chunk_steps > 1:
             # fused engine: sharded device ring + K steps per dispatch
             # (manual strategy slices its relaid-out local block; GSPMD
@@ -237,8 +307,9 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                               args.batch, mesh=mesh, relayout=not tp)
             t0 = time.perf_counter()
             state, steps = _drive_chunks(jstep, state, params, ring,
-                                         args.steps, args.chunk_steps)
-            return state, time.perf_counter() - t0, steps
+                                         args.steps, args.chunk_steps,
+                                         start=start, ckpt=ckpt)
+            return state, time.perf_counter() - t0, steps - start
 
         b_sh = batch_sharding(mesh)
         extra = {k: jax.device_put(v, b_sh)
@@ -252,7 +323,7 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                 sampler,
                 sharding=SH.data_parallel_shardings(mesh, sampler(0)))
         t0 = time.perf_counter()
-        for j in range(args.steps):
+        for j in range(start, args.steps):
             batch = dict(feed(j), **extra)
             state, params, m = jstep(state, params, batch)
             if (j + 1) % 5 == 0 or j == 0:
@@ -260,11 +331,15 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                       f"psi_bar={float(m['psi_bar']):.4f} "
                       f"limit={float(m['limit']):.4f} "
                       f"accel={bool(m['accelerated'])}")
-        return state, time.perf_counter() - t0, args.steps
+            if ckpt is not None:
+                ckpt.maybe_save(j + 1, params=params, state=state)
+        return state, time.perf_counter() - t0, args.steps - start
 
 
 def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
     from repro.distributed import AsyncPSCoordinator, staleness_reduce_from_spec
+    from repro.distributed.async_ps.coordinator import (
+        snapshot_engine_kwargs, snapshot_from_checkpoint)
 
     if cfg.family in ("vlm", "encdec"):
         raise SystemExit("--engine async-ps supports decoder-only/cnn "
@@ -279,24 +354,61 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
                          "async-ps (workers own fixed FCPR stripes; a "
                          "shared selection policy would race the table)")
     if sampler.n_batches % args.workers:
-        raise SystemExit(f"n_batches={sampler.n_batches} must be a multiple "
-                         f"of --workers {args.workers} (per-worker FCPR "
-                         f"shards)")
+        # legal since re-striping (ISSUE 7): the strided shards still cover
+        # the global cycle, ownership just rotates (see ShardedFeed)
+        print(f"note: n_batches={sampler.n_batches} not a multiple of "
+              f"--workers {args.workers}; per-worker batch ownership "
+              f"rotates through the FCPR cycle")
+    faults = None
+    if args.fault_plan:
+        from repro.fault import FaultPlan
+        faults = FaultPlan.from_spec(args.fault_plan)
+        print(f"faults: {faults}")
     rctx = staleness_reduce_from_spec(args.staleness_decay)
     print(f"arch={cfg.name} engine=async-ps workers={args.workers} "
-          f"max_staleness={args.max_staleness} w(tau)={args.staleness_decay}")
+          f"max_staleness={args.max_staleness} w(tau)={args.staleness_decay} "
+          f"elastic={args.elastic} deadline={args.deadline:.0f}s")
 
     params = model.init(jax.random.PRNGKey(0), max_seq=args.seq)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"params: {n_params/1e6:.1f}M (canonical copy on the server)")
 
+    kw = dict(elastic=args.elastic, deadline_s=args.deadline,
+              verify_pushes=args.verify_pushes)
+    if faults is not None:
+        kw["faults"] = faults
     coord = AsyncPSCoordinator(
         model.loss_fn, rule, icfg, workers=args.workers,
         max_staleness=args.max_staleness, lr_fn=lr_fn, reduce_ctx=rctx,
-        inconsistent=not args.consistent)
+        inconsistent=not args.consistent, **kw)
+
+    ckpt = _make_checkpointer(args)
+    resume = None
+    if args.resume and ckpt is not None and ckpt.latest() is not None:
+        from repro.core import isgd_init
+        from repro.train.checkpoints import restore_engine
+        ck = restore_engine(ckpt.latest(), params_like=params,
+                            state_like=isgd_init(rule, icfg, params))
+        ckpt.mark(ck.step)
+        resume = snapshot_from_checkpoint(ck)
+        print(f"resume: restored {ckpt.latest()!r} at server version "
+              f"{ck.server['version']} (worker push clocks: "
+              f"{ck.server['pushed']})")
+
+    def checkpoint_fn(snap):
+        ek = snapshot_engine_kwargs(snap)
+        ckpt.save(ek.pop("step"), **ek)
+
+    run_kw = {}
+    if ckpt is not None and args.checkpoint_every:
+        run_kw = dict(checkpoint_fn=checkpoint_fn,
+                      checkpoint_every=args.checkpoint_every)
     t0 = time.perf_counter()
-    params, state, records = coord.run(params, sampler, args.steps)
+    params, state, records = coord.run(params, sampler, args.steps,
+                                       resume=resume, **run_kw)
     dt = time.perf_counter() - t0
+    for ev in coord.events:
+        print(f"event: {ev}")
     for i, r in enumerate(records):
         if (i + 1) % 5 == 0 or i == 0:
             print(f"push {i+1:4d} w{r['worker']} tau={r['tau']} "
@@ -376,6 +488,38 @@ def main():
                          "Selection runs on device over the ring; fcpr is "
                          "bit-exact with the default engines; omit for the "
                          "hard-wired FCPR paths")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for crash-consistent full-engine "
+                         "checkpoints (atomic .npz, checksummed; "
+                         "repro.train.checkpoints)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint cadence in steps (sync engines: saved "
+                         "at the first step/chunk boundary past each mark; "
+                         "async-ps: every N applied pushes, written under "
+                         "the server lock).  0 = never")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest complete checkpoint in "
+                         "--checkpoint-dir (a resumed run continues the "
+                         "uninterrupted trajectory bit-exactly — "
+                         "repro.train.resume_parity)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="async-ps: evict crashed/deadline-missing workers "
+                         "and re-stripe their FCPR shard across survivors "
+                         "instead of failing the run")
+    ap.add_argument("--deadline", type=float, default=120.0,
+                    help="async-ps: heartbeat deadline in seconds — a "
+                         "worker blocking the SSP clock without a "
+                         "heartbeat for this long is stalled (evicted when "
+                         "--elastic, fatal diagnostic otherwise)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="async-ps: deterministic fault injection spec, "
+                         "kind@worker:step[:key=value,...] joined by ';' — "
+                         "e.g. 'crash@2:5;hang@1:8:seconds=1.0' "
+                         "(repro.fault)")
+    ap.add_argument("--verify-pushes", action="store_true",
+                    help="async-ps: workers checksum their deltas and the "
+                         "server rejects corrupt arrivals (rejected/"
+                         "transient pushes retry with backoff)")
     args = ap.parse_args()
 
     if (args.arch is None) == (args.model is None):

@@ -1,9 +1,12 @@
 from repro.train import checkpoints
+from repro.train.checkpoints import Checkpointer
 from repro.train.chunked import chunk_over_ring, make_chunked_train_step
+from repro.train.resume_parity import run_resume_parity
 from repro.train.trainer import (TrainLog, make_loss_and_grad,
                                  make_scheduled_train_step, make_step_core,
                                  make_train_step, train)
 
 __all__ = ["make_train_step", "make_step_core", "make_chunked_train_step",
            "make_scheduled_train_step", "chunk_over_ring",
-           "make_loss_and_grad", "train", "TrainLog", "checkpoints"]
+           "make_loss_and_grad", "train", "TrainLog", "checkpoints",
+           "Checkpointer", "run_resume_parity"]

@@ -1,18 +1,66 @@
-"""Checkpointing: pure-numpy .npz of a flattened pytree + ISGD control state.
+"""Crash-consistent checkpointing: pure-numpy .npz of flattened pytrees.
 
 No external deps (orbax etc.) — paths/keys are derived from the tree
 structure, so save/restore round-trips any params/opt-state pytree used in
 this framework, including the ISGD loss queue (so inconsistent training can
 resume with its control limit intact).
+
+On-disk format (one ``.npz`` zip archive per checkpoint):
+
+  * one array member per pytree leaf, keyed by its flattened tree path
+    (``'a'/'b'`` for nested dicts, ``[0]`` for sequence entries, ``.field``
+    for NamedTuple fields).  bf16 leaves are stored as f32 (npz cannot
+    represent bf16); the f32 image is exact, so a bf16 round-trip is
+    lossless.
+  * a ``__meta__`` JSON member: ``{"format": 2, "keys": [...], "checksum":
+    "<crc32 hex over every key/dtype/shape/payload>", "extra": {...}}``.
+    ``extra`` is caller JSON (step cursors, server counters, …).  Format-1
+    files (no checksum) from older runs still restore.
+
+Crash-consistency guarantee: ``save`` writes to a temp file in the target
+directory, fsyncs, then ``os.replace``s it over the final path — on POSIX
+the rename is atomic, so a reader (or a restarted run) sees either the
+complete previous checkpoint or the complete new one, never a torn write.
+A kill *during* the write leaves at worst a stale ``*.tmp-*`` file next to
+an intact checkpoint.  ``restore`` verifies the content checksum and the
+shape/dtype of every leaf against the caller's template before returning,
+raising :class:`CheckpointError` with the offending key rather than a
+cryptic numpy error.
+
+``pack_engine_state``/``unpack_engine_state`` define the full-engine
+checkpoint every launch runner shares: params, the complete ``ISGDState``
+(base-rule state, ψ control queue, iteration/acceleration counters), the
+optional ``repro.sched`` policy state, the FCPR step cursor, and — for the
+async-PS engine — the server version counter plus the per-worker SSP push
+clocks.  Restoring it puts a killed run back onto the uninterrupted
+trajectory bit-exactly (``repro.train.resume_parity`` proves it per
+engine).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
+import zlib
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+FORMAT_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be restored (corrupt, truncated, or it does
+    not match the requested template)."""
+
+
+def _norm_path(path: str) -> str:
+    """``np.savez`` silently appends ``.npz`` when the suffix is missing;
+    normalizing BOTH directions keeps ``save("ckpt"); restore("ckpt", …)``
+    working instead of failing with a confusing FileNotFoundError."""
+    return path if path.endswith(".npz") else path + ".npz"
 
 
 def _flatten(tree):
@@ -27,25 +75,246 @@ def _flatten(tree):
     return out, treedef
 
 
-def save(path: str, tree, extra: dict | None = None):
+def _stored_dtype(dtype) -> np.dtype:
+    """The dtype a leaf of ``dtype`` is stored as on disk."""
+    return np.dtype(np.float32) if dtype == jnp.bfloat16 else np.dtype(dtype)
+
+
+def _checksum(arrays: dict) -> str:
+    """Deterministic crc32 over every key, dtype, shape and payload, in
+    sorted key order — cheap enough to run on every save/restore, strong
+    enough to catch truncation and bit corruption."""
+    crc = 0
+    for key in sorted(arrays):
+        arr = np.ascontiguousarray(arrays[key])
+        head = f"{key}|{arr.dtype.str}|{arr.shape}".encode()
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(head, crc))
+    return f"{crc:08x}"
+
+
+def tree_checksum(tree) -> str:
+    """Content checksum of a pytree (used by the async-PS server to reject
+    deltas corrupted in transit — see ``repro.distributed.async_ps``)."""
+    arrays, _ = _flatten(tree)
+    return _checksum(arrays)
+
+
+def save(path: str, tree, extra: dict | None = None) -> str:
+    """Atomically write ``tree`` (+ JSON-able ``extra``) to ``path``.
+
+    Returns the normalized path actually written (``.npz`` appended when
+    missing).  See the module docstring for the crash-consistency
+    guarantee.
+    """
+    path = _norm_path(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays, _ = _flatten(tree)
-    meta = {"keys": sorted(arrays.keys()), "extra": extra or {}}
-    np.savez(path, __meta__=json.dumps(meta), **arrays)
+    meta = {"format": FORMAT_VERSION, "keys": sorted(arrays.keys()),
+            "checksum": _checksum(arrays), "extra": extra or {}}
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)                  # atomic publish
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
+
+
+def _load(path: str):
+    """-> (arrays dict fully read into memory, meta dict).  Every failure
+    mode maps to a clear :class:`CheckpointError`."""
+    path = _norm_path(path)
+    if not os.path.exists(path):
+        raise CheckpointError(f"no checkpoint at {path!r} (path is "
+                              f"normalized to the .npz suffix)")
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            arrays = {k: data[k] for k in data.files if k != "__meta__"}
+            meta = (json.loads(str(data["__meta__"]))
+                    if "__meta__" in data.files else {})
+    except CheckpointError:
+        raise
+    except Exception as e:   # BadZipFile / ValueError / EOFError / OSError
+        raise CheckpointError(
+            f"checkpoint {path!r} is truncated or corrupt and cannot be "
+            f"read ({type(e).__name__}: {e}); was the writing process "
+            f"killed mid-save without the atomic rename?") from e
+    if meta.get("checksum"):
+        got = _checksum(arrays)
+        if got != meta["checksum"]:
+            raise CheckpointError(
+                f"checkpoint {path!r} failed its content checksum "
+                f"(stored {meta['checksum']}, recomputed {got}): the file "
+                f"was corrupted after it was written")
+    return arrays, meta
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (a template pytree)."""
-    data = np.load(path, allow_pickle=False)
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Every leaf is verified against the template before anything is
+    returned: a missing key, shape mismatch or dtype mismatch raises
+    :class:`CheckpointError` naming the offending key.  Keys present in the
+    file but absent from the template are ignored (forward compatibility).
+    """
+    arrays, _ = _load(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat:
         key = "/".join(str(k) for k in p)
-        arr = data[key]
-        leaves.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+        if key not in arrays:
+            have = ", ".join(sorted(arrays)) or "<empty>"
+            raise CheckpointError(
+                f"checkpoint {_norm_path(path)!r} has no entry for "
+                f"{key!r} required by the template (file has: {have})")
+        arr = arrays[key]
+        leaf_dtype = getattr(leaf, "dtype", None) or np.asarray(leaf).dtype
+        want_shape = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want_shape:
+            raise CheckpointError(
+                f"checkpoint entry {key!r} has shape {tuple(arr.shape)} "
+                f"but the template expects {want_shape}")
+        want_dtype = _stored_dtype(leaf_dtype)
+        if arr.dtype != want_dtype:
+            raise CheckpointError(
+                f"checkpoint entry {key!r} has dtype {arr.dtype} but the "
+                f"template expects {want_dtype} (bf16 leaves are stored "
+                f"as f32)")
+        leaves.append(jnp.asarray(arr, dtype=leaf_dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def load_extra(path: str) -> dict:
-    data = np.load(path, allow_pickle=False)
-    return json.loads(str(data["__meta__"]))["extra"]
+    _, meta = _load(path)
+    return meta.get("extra", {})
+
+
+# -- full-engine checkpoints -------------------------------------------------
+class EngineCheckpoint(NamedTuple):
+    """One restored full-engine checkpoint (see ``unpack_engine_state``)."""
+    params: Any               # weight pytree
+    state: Any                # ISGDState: base rule state + ψ queue + counters
+    sched_state: Any          # repro.sched policy state, or None
+    step: int                 # global step cursor (FCPR: batch = step mod n_b)
+    server: Optional[dict]    # async-PS: {"version": int, "pushed": {wid: n}}
+
+
+def pack_engine_state(*, params, state, step: int, sched_state=None,
+                      server: dict | None = None):
+    """-> ``(tree, extra)`` covering everything a killed engine needs to
+    resume bit-exactly: params, the full ``ISGDState`` (optimizer base, ψ
+    control queue, FCPR/iteration counters), the optional sched-policy
+    state, the global step cursor, and the async-PS server metadata
+    (version counter + per-worker SSP push clocks)."""
+    tree = {"params": params, "state": state}
+    if sched_state is not None:
+        tree["sched_state"] = sched_state
+    extra = {"kind": "engine", "step": int(step)}
+    if server is not None:
+        extra["server"] = {
+            "version": int(server["version"]),
+            "pushed": {str(w): int(n)
+                       for w, n in server.get("pushed", {}).items()},
+        }
+    return tree, extra
+
+
+def unpack_engine_state(tree: dict, extra: dict) -> EngineCheckpoint:
+    """Inverse of :func:`pack_engine_state` over already-restored pieces."""
+    server = extra.get("server")
+    if server is not None:
+        server = {"version": int(server["version"]),
+                  "pushed": {int(w): int(n)
+                             for w, n in server.get("pushed", {}).items()}}
+    return EngineCheckpoint(params=tree["params"], state=tree["state"],
+                            sched_state=tree.get("sched_state"),
+                            step=int(extra["step"]), server=server)
+
+
+def save_engine(path: str, *, params, state, step: int, sched_state=None,
+                server: dict | None = None) -> str:
+    tree, extra = pack_engine_state(params=params, state=state, step=step,
+                                    sched_state=sched_state, server=server)
+    return save(path, tree, extra=extra)
+
+
+def restore_engine(path: str, *, params_like, state_like,
+                   sched_like=None) -> EngineCheckpoint:
+    """Restore a full-engine checkpoint against templates (the freshly
+    initialized params/state/sched pytrees of the resuming run)."""
+    like = {"params": params_like, "state": state_like}
+    if sched_like is not None:
+        like["sched_state"] = sched_like
+    extra = load_extra(path)
+    if extra.get("kind") != "engine":
+        raise CheckpointError(
+            f"{_norm_path(path)!r} is not a full-engine checkpoint "
+            f"(extra: {extra!r}); use restore() for plain pytrees")
+    tree = restore(path, like)
+    return unpack_engine_state(tree, extra)
+
+
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+
+class Checkpointer:
+    """Periodic engine checkpoints in a directory (``ckpt_<step>.npz``).
+
+    ``maybe_save(step, …)`` writes whenever the run crosses an ``every``
+    boundary since the last save — chunked engines call it at chunk
+    boundaries, so with ``every`` not a multiple of the chunk size the save
+    lands on the first boundary past the mark.  ``latest()`` finds the
+    newest complete checkpoint for ``--resume`` (atomic saves guarantee any
+    file it finds is complete).
+    """
+
+    def __init__(self, directory: str, every: int = 0, keep: int = 3):
+        self.directory = directory
+        self.every = every
+        self.keep = keep
+        self._last = 0
+        os.makedirs(directory, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def mark(self, step: int) -> None:
+        """Tell the checkpointer a resumed run starts at ``step`` so
+        ``maybe_save`` measures boundaries from there."""
+        self._last = int(step)
+
+    def save(self, step: int, **engine_kwargs) -> str:
+        out = save_engine(self.path(step), step=step, **engine_kwargs)
+        self._last = int(step)
+        self._prune()
+        return out
+
+    def maybe_save(self, step: int, **engine_kwargs) -> Optional[str]:
+        if not self.every or int(step) // self.every <= self._last // self.every:
+            return None
+        return self.save(step, **engine_kwargs)
+
+    def steps(self) -> list[int]:
+        try:
+            names = os.listdir(self.directory)
+        except FileNotFoundError:
+            return []
+        return sorted(int(m.group(1)) for n in names
+                      if (m := _CKPT_RE.match(n)))
+
+    def latest(self) -> Optional[str]:
+        steps = self.steps()
+        return self.path(steps[-1]) if steps else None
+
+    def _prune(self) -> None:
+        if not self.keep:
+            return                             # keep=0: never delete
+        for s in self.steps()[:-self.keep]:
+            try:
+                os.remove(self.path(s))
+            except OSError:
+                pass

@@ -1,0 +1,334 @@
+"""Kill-and-resume parity: a checkpointed run resumes **bit-exactly**.
+
+For each engine this module runs the same FCPR problem twice:
+
+  * **uninterrupted** — the reference trajectory to S steps;
+  * **killed** — run to step k, write a full-engine checkpoint
+    (``repro.train.checkpoints.save_engine`` — a real on-disk ``.npz``
+    round-trip, not an in-memory copy), throw EVERYTHING away, restore
+    against freshly initialized templates, and run the remaining steps.
+
+and demands the final ``(params, ISGDState)`` agree to the **bit** (max
+abs deviation exactly 0.0).  That is the strongest possible statement that
+the checkpoint captures the complete engine state: base-rule state, the ψ
+control queue (so the resumed ψ̄-lagged loss-driven LR reproduces the
+uninterrupted schedule — the lr_fn here depends on ψ̄ on purpose), the
+iteration/acceleration counters, the sched-policy state and the FCPR step
+cursor.  The problem is rigged with an outlier batch so the accelerate
+``cond``/``while_loop`` fires across the kill boundary, not just the base
+update.
+
+Legs:
+
+  * ``per-step``  — ``make_train_step``; killed at k=10 of S=30;
+  * ``chunked``   — killed at a K=3 chunk boundary (step 6), resumed with
+    K=4 — step 6 is **mid-chunk** on the resumed grid (6 % 4 = 2), pinning
+    that ``chunk_fn``'s ``j0`` really is a free cursor; reference is the
+    *per-step* engine (resume parity composes with engine parity);
+  * ``sched``     — the fused scheduled engine under ``loss-prop``
+    (stateful policy: EMA loss table rides the checkpoint);
+  * ``hybrid``    — the DP×TP engine on the host mesh (data axis = all
+    devices), checkpointing the sharded arrays through the same npz path;
+  * ``async-ps``  — 1 worker, ``max_staleness=0``: the crash-consistent
+    server snapshot (written by the in-lock ``checkpoint_fn`` hook at
+    version 10) is saved to disk, restored, and handed back as ``resume=``;
+    the worker replays from its SSP push clock.
+
+Usable in-process (tests call ``run_resume_parity``) or as a module:
+
+    PYTHONPATH=src python -m repro.train.resume_parity [--devices 8]
+
+Exit status 0 iff every leg is bit-exact.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+
+def _force_host_devices(n: int) -> None:
+    assert "jax" not in sys.modules, "--devices must be set before jax init"
+    flags = os.environ.get("XLA_FLAGS", "")
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def _problem(batch_size: int = 32, n_batches: int = 4):
+    """Least-squares + one outlier batch (same rig as the other parity
+    modules): the outlier breaches ψ̄ + kσ every cycle after warm-up, so the
+    subproblem fires on both sides of the kill."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ISGDConfig
+    from repro.data import FCPRSampler
+    from repro.optim import momentum
+
+    dim = 6
+    rng = np.random.RandomState(0)
+    xs = rng.randn(batch_size * n_batches, dim).astype(np.float32)
+    ys = ((xs @ rng.randn(dim, 1).astype(np.float32)).ravel()
+          / np.sqrt(dim)).astype(np.float32)
+    ys[:batch_size] += 3.0                        # the under-trained batch
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch_size, seed=1)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.0, stop=3,
+                      zeta=0.01)
+
+    # ψ̄-dependent LR on purpose: a resume that loses the queue would pick a
+    # wrong LR on its first step and diverge from the reference immediately
+    def lr_fn(psi_bar):
+        return 0.01 + 0.001 * jnp.minimum(psi_bar, 1.0)
+
+    return loss_fn, params0, sampler, icfg, momentum(0.9), lr_fn
+
+
+def _max_dev(a, b) -> float:
+    import jax
+    import jax.numpy as jnp
+    diffs = jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                           - jnp.asarray(y, jnp.float32))))
+        if getattr(x, "size", 1) else 0.0, a, b)
+    return max(jax.tree.leaves(diffs), default=0.0)
+
+
+def _leg(name: str, ref, resumed, accelerations: int) -> dict:
+    dev = max(_max_dev(ref[0], resumed[0]), _max_dev(ref[1], resumed[1]))
+    return {"leg": name, "ok": dev == 0.0, "max_dev": dev,
+            "accelerations": accelerations}
+
+
+def _leg_per_step(tmp: str, S: int, k: int) -> dict:
+    from repro.train import checkpoints
+    from repro.train.trainer import make_train_step
+
+    loss_fn, params0, sampler, icfg, rule, lr_fn = _problem()
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=lr_fn,
+                                    donate=False)
+
+    def run(state, params, j0, j1):
+        accel = 0
+        for j in range(j0, j1):
+            state, params, m = step(state, params, sampler(j))
+            accel += int(m["accelerated"])
+        return state, params, accel
+
+    state, params, a_ref = run(init_fn(params0), params0, 0, S)
+
+    st, pr, a1 = run(init_fn(params0), params0, 0, k)
+    checkpoints.save_engine(os.path.join(tmp, "per_step"), params=pr,
+                            state=st, step=k)
+    ck = checkpoints.restore_engine(                   # fresh templates
+        os.path.join(tmp, "per_step"),
+        params_like=params0, state_like=init_fn(params0))
+    st2, pr2, a2 = run(ck.state, ck.params, ck.step, S)
+    return _leg("per-step", (params, state), (pr2, st2), a_ref)
+
+
+def _leg_chunked(tmp: str, S: int, k: int) -> dict:
+    import jax.numpy as jnp
+
+    from repro.data import DeviceRing
+    from repro.train import checkpoints
+    from repro.train.chunked import make_chunked_train_step
+    from repro.train.trainer import make_train_step
+
+    loss_fn, params0, sampler, icfg, rule, lr_fn = _problem()
+    assert k % 3 == 0 and (S - k) % 4 == 0 and k % 4 != 0, (S, k)
+    ring = DeviceRing(dict(sampler.epoch_arrays()), sampler.batch_size)
+
+    # reference: the PER-STEP engine — the kill/resume legs must land on the
+    # same trajectory the engines already agree on, not a chunk-private one
+    init_fn, step = make_train_step(loss_fn, rule, icfg, lr_fn=lr_fn,
+                                    donate=False)
+    state, params = init_fn(params0), params0
+    a_ref = 0
+    for j in range(S):
+        state, params, m = step(state, params, sampler(j))
+        a_ref += int(m["accelerated"])
+
+    _, chunk3 = make_chunked_train_step(loss_fn, rule, icfg, chunk_steps=3,
+                                        lr_fn=lr_fn, donate=False)
+    st, pr = init_fn(params0), params0
+    for c in range(k // 3):
+        st, pr, _ = chunk3(st, pr, ring.arrays, c * 3)
+    checkpoints.save_engine(os.path.join(tmp, "chunked"), params=pr,
+                            state=st, step=k)
+    ck = checkpoints.restore_engine(
+        os.path.join(tmp, "chunked"),
+        params_like=params0, state_like=init_fn(params0))
+    # resume with K=4: ck.step=6 sits MID-chunk on this grid (6 % 4 = 2)
+    _, chunk4 = make_chunked_train_step(loss_fn, rule, icfg, chunk_steps=4,
+                                        lr_fn=lr_fn, donate=False)
+    st2, pr2, j0 = ck.state, ck.params, jnp.asarray(ck.step, jnp.int32)
+    for c in range((S - ck.step) // 4):
+        st2, pr2, _ = chunk4(st2, pr2, ring.arrays, j0 + c * 4)
+    return _leg("chunked", (params, state), (pr2, st2), a_ref)
+
+
+def _leg_sched(tmp: str, S: int, k: int) -> dict:
+    from repro.data import DeviceRing
+    from repro.sched import schedule_from_spec
+    from repro.train import checkpoints
+    from repro.train.chunked import make_chunked_train_step
+
+    loss_fn, params0, sampler, icfg, rule, lr_fn = _problem()
+    K = 3
+    assert k % K == 0 and S % K == 0, (S, k, K)
+    schedule = schedule_from_spec("loss-prop")
+    ring = DeviceRing(dict(sampler.epoch_arrays()), sampler.batch_size)
+    init_fn, chunk = make_chunked_train_step(
+        loss_fn, rule, icfg, chunk_steps=K, lr_fn=lr_fn, donate=False,
+        schedule=schedule)
+
+    def run(state, params, sched_state, c0, c1):
+        accel = 0
+        for c in range(c0, c1):
+            state, params, sched_state, ms = chunk(state, params, sched_state,
+                                                   ring.arrays, c * K)
+            accel += int(ms["accelerated"].sum())
+        return state, params, sched_state, accel
+
+    sch0 = schedule.init(icfg.n_batches)
+    state, params, sch, a_ref = run(init_fn(params0), params0, sch0, 0, S // K)
+
+    st, pr, s1, _ = run(init_fn(params0), params0, sch0, 0, k // K)
+    checkpoints.save_engine(os.path.join(tmp, "sched"), params=pr, state=st,
+                            sched_state=s1, step=k)
+    ck = checkpoints.restore_engine(
+        os.path.join(tmp, "sched"), params_like=params0,
+        state_like=init_fn(params0), sched_like=schedule.init(icfg.n_batches))
+    st2, pr2, s2, _ = run(ck.state, ck.params, ck.sched_state,
+                          ck.step // K, S // K)
+    r = _leg("sched", (params, state), (pr2, st2), a_ref)
+    r["max_dev"] = max(r["max_dev"], _max_dev(sch, s2))
+    r["ok"] = r["max_dev"] == 0.0
+    return r
+
+
+def _leg_hybrid(tmp: str, S: int, k: int) -> dict:
+    import jax
+
+    from repro.distributed import batch_sharding, make_hybrid_step
+    from repro.launch.mesh import make_host_mesh
+    from repro.train import checkpoints
+
+    loss_fn, params0, sampler, icfg, rule, lr_fn = _problem()
+    mesh = make_host_mesh(model=1)
+    assert sampler.batch_size % mesh.shape["data"] == 0
+    init_fn, step = make_hybrid_step(loss_fn, rule, icfg, mesh, lr_fn=lr_fn,
+                                     donate=False)
+    b_sh = batch_sharding(mesh)
+
+    def run(state, params, j0, j1):
+        accel = 0
+        with mesh:
+            for j in range(j0, j1):
+                batch = jax.device_put(sampler(j), b_sh)
+                state, params, m = step(state, params, batch)
+                accel += int(m["accelerated"])
+        return state, params, accel
+
+    state, params, a_ref = run(init_fn(params0), params0, 0, S)
+
+    st, pr, _ = run(init_fn(params0), params0, 0, k)
+    checkpoints.save_engine(os.path.join(tmp, "hybrid"), params=pr, state=st,
+                            step=k)
+    ck = checkpoints.restore_engine(
+        os.path.join(tmp, "hybrid"),
+        params_like=params0, state_like=init_fn(params0))
+    st2, pr2, _ = run(ck.state, ck.params, ck.step, S)
+    return _leg("hybrid", (params, state), (pr2, st2), a_ref)
+
+
+def _leg_async_ps(tmp: str, S: int, k: int) -> dict:
+    from repro.core import isgd_init
+    from repro.distributed.async_ps.coordinator import (
+        AsyncPSCoordinator, snapshot_engine_kwargs, snapshot_from_checkpoint)
+    from repro.train import checkpoints
+
+    loss_fn, params0, sampler, icfg, rule, lr_fn = _problem()
+
+    def coord():
+        return AsyncPSCoordinator(loss_fn, rule, icfg, workers=1,
+                                  max_staleness=0, lr_fn=lr_fn)
+
+    # the uninterrupted run doubles as the checkpoint writer: the server's
+    # in-lock checkpoint_fn hook fires at version k (crash consistency —
+    # the snapshot pairs push k with its SSP clock)
+    snaps = []
+    c1 = coord()
+    c1.warmup(params0, sampler)
+    params, state, records = c1.run(
+        params0, sampler, S,
+        checkpoint_fn=lambda s: snaps.append(s), checkpoint_every=k)
+    snap = next(s for s in snaps if s["version"] == k)
+    checkpoints.save_engine(os.path.join(tmp, "async_ps"),
+                            **snapshot_engine_kwargs(snap))
+
+    ck = checkpoints.restore_engine(
+        os.path.join(tmp, "async_ps"), params_like=params0,
+        state_like=isgd_init(rule, icfg, params0))
+    assert ck.server == {"version": k, "pushed": {0: k}}, ck.server
+    params2, state2, rec2 = coord().run(params0, sampler, S,
+                                        resume=snapshot_from_checkpoint(ck))
+    a_ref = sum(int(r["accelerated"]) for r in records)
+    r = _leg("async-ps", (params, state), (params2, state2), a_ref)
+    r["resumed_pushes"] = len(rec2)            # only the replayed tail
+    return r
+
+
+def run_resume_parity(S: int = 30, k: int = 10, *,
+                      legs=("per-step", "chunked", "sched", "hybrid",
+                            "async-ps")) -> list:
+    """Returns one result dict per leg: {"leg", "ok", "max_dev",
+    "accelerations"} — ``ok`` means bit-exact (max_dev == 0.0)."""
+    runners = {"per-step": lambda t: _leg_per_step(t, S, k),
+               "chunked": lambda t: _leg_chunked(t, S, 6),
+               "sched": lambda t: _leg_sched(t, S, max(3, k - k % 3)),
+               "hybrid": lambda t: _leg_hybrid(t, S, k),
+               "async-ps": lambda t: _leg_async_ps(t, S, k)}
+    out = []
+    with tempfile.TemporaryDirectory(prefix="resume_parity_") as tmp:
+        for leg in legs:
+            out.append(runners[leg](tmp))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force this many XLA host-platform devices "
+                         "(0 = use whatever XLA_FLAGS already provides)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--kill-at", type=int, default=10)
+    args = ap.parse_args(argv)
+    if args.devices:
+        _force_host_devices(args.devices)
+    results = run_resume_parity(args.steps, args.kill_at)
+    fired = 0
+    for r in results:
+        fired += r["accelerations"]
+        print(f"resume-parity {r['leg']:>8s}: "
+              f"max_dev={r['max_dev']:.3e} "
+              f"accelerations={r['accelerations']} -> "
+              f"{'BIT-EXACT' if r['ok'] else 'FAIL'}")
+    if fired == 0:
+        print("resume-parity WARNING: subproblem never fired; the "
+              "cond/while path never crossed a kill boundary")
+        return 2
+    return 0 if all(r["ok"] for r in results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

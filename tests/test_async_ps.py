@@ -211,8 +211,28 @@ def test_sharded_feed_strides_global_cycle():
         for w, f in enumerate(feeds):
             np.testing.assert_array_equal(
                 np.asarray(f(k)["x"]), sampler(k * 3 + w)["x"])
-    with pytest.raises(AssertionError):
-        ShardedFeed(sampler, 0, 5)                        # 12 % 5 != 0
+    # non-divisible worker counts are legal now (ISSUE 7: re-striping needs
+    # them) — the strided indices still enumerate the global cycle exactly
+    # once across workers, ownership just rotates
+    feeds5 = [ShardedFeed(sampler, w, 5) for w in range(5)]  # 12 % 5 != 0
+    assert all(f.n_batches == 3 for f in feeds5)             # ceil(12/5)
+    seen = sorted(k * 5 + w for k in range(12) for w in range(5))
+    assert [g % 12 for g in seen[:12]] == sorted(g % 12 for g in range(12))
+    for k in range(3):
+        for w, f in enumerate(feeds5):
+            np.testing.assert_array_equal(
+                np.asarray(f(k)["x"]), sampler(k * 5 + w)["x"])
+
+
+def test_sharded_feed_restripe():
+    rng = np.random.RandomState(0)
+    data = {"x": rng.randn(48, 3).astype(np.float32)}
+    sampler = FCPRSampler(data, batch_size=4, seed=1)     # 12 batches
+    f = ShardedFeed(sampler, 3, 4)
+    np.testing.assert_array_equal(np.asarray(f(2)["x"]), sampler(11)["x"])
+    f.restripe(1, 3)                                      # worker 3 → rank 1/3
+    assert (f.wid, f.n_workers) == (1, 3)
+    np.testing.assert_array_equal(np.asarray(f(2)["x"]), sampler(7)["x"])
 
 
 def test_records_to_trainlog_wall_semantics():

@@ -1,10 +1,14 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import ISGDConfig, isgd_init
 from repro.optim import momentum
 from repro.train import checkpoints
+from repro.train.checkpoints import CheckpointError, Checkpointer
 
 
 def test_roundtrip(tmp_path):
@@ -34,3 +38,147 @@ def test_isgd_state_roundtrip(tmp_path):
     assert float(control.mean(restored.queue)) == float(control.mean(state.queue))
     assert float(control.control_limit(restored.queue)) == \
         float(control.control_limit(state.queue))
+
+
+# ---------------------------------------------------------------------------
+# suffix normalization (ISSUE 7 satellite: save appended .npz, restore
+# didn't — the pre-fix pair failed with FileNotFoundError)
+# ---------------------------------------------------------------------------
+def test_suffix_normalized_both_directions(tmp_path):
+    tree = {"w": jnp.ones((2,))}
+    out = checkpoints.save(str(tmp_path / "bare"), tree)   # no .npz suffix
+    assert out.endswith("bare.npz") and os.path.exists(out)
+    for spec in ("bare", "bare.npz"):                      # restore either way
+        r = checkpoints.restore(str(tmp_path / spec), {"w": jnp.zeros((2,))})
+        np.testing.assert_array_equal(np.asarray(r["w"]), 1.0)
+    assert checkpoints.save(str(tmp_path / "full.npz"), tree) == \
+        str(tmp_path / "full.npz")
+
+
+def test_save_is_atomic_no_tmp_residue(tmp_path):
+    checkpoints.save(str(tmp_path / "a"), {"w": jnp.ones(3)})
+    names = os.listdir(tmp_path)
+    assert names == ["a.npz"], names                       # no *.tmp-* left
+
+
+# ---------------------------------------------------------------------------
+# restore failure modes: each a clear CheckpointError, not a numpy stack
+# ---------------------------------------------------------------------------
+def _save_simple(tmp_path, name="c"):
+    path = str(tmp_path / name)
+    return checkpoints.save(path, {"w": jnp.arange(4.0), "b": jnp.ones(())})
+
+
+def test_restore_missing_file(tmp_path):
+    with pytest.raises(CheckpointError, match="no checkpoint at"):
+        checkpoints.restore(str(tmp_path / "nope"), {"w": jnp.zeros(4)})
+
+
+def test_restore_missing_key(tmp_path):
+    path = _save_simple(tmp_path)
+    with pytest.raises(CheckpointError, match="no entry for .*extra_key"):
+        checkpoints.restore(path, {"w": jnp.zeros(4), "b": jnp.zeros(()),
+                                   "extra_key": jnp.zeros(2)})
+    # the other direction — file keys absent from the template — is ignored
+    r = checkpoints.restore(path, {"w": jnp.zeros(4)})
+    assert set(r) == {"w"}
+
+
+def test_restore_shape_mismatch(tmp_path):
+    path = _save_simple(tmp_path)
+    with pytest.raises(CheckpointError, match="shape"):
+        checkpoints.restore(path, {"w": jnp.zeros((2, 2)), "b": jnp.zeros(())})
+
+
+def test_restore_dtype_mismatch(tmp_path):
+    path = _save_simple(tmp_path)
+    with pytest.raises(CheckpointError, match="dtype"):
+        checkpoints.restore(path, {"w": jnp.zeros(4, jnp.int32),
+                                   "b": jnp.zeros(())})
+
+
+def test_restore_truncated_file(tmp_path):
+    path = _save_simple(tmp_path)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        checkpoints.restore(path, {"w": jnp.zeros(4), "b": jnp.zeros(())})
+
+
+def test_restore_corrupt_payload_fails_checksum(tmp_path):
+    path = _save_simple(tmp_path)
+    # flip bytes in the middle of the zip payload without breaking the
+    # container structure badly enough for numpy to notice
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 3)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(CheckpointError,
+                       match="checksum|truncated or corrupt"):
+        checkpoints.restore(path, {"w": jnp.zeros(4), "b": jnp.zeros(())})
+
+
+def test_bf16_roundtrip_lossless(tmp_path):
+    """bf16 leaves are stored as their exact f32 image (npz has no bf16)."""
+    vals = jnp.asarray([1.0, 3.140625, -2.5e4, 6.1e-5], jnp.bfloat16)
+    path = checkpoints.save(str(tmp_path / "bf16"), {"w": vals})
+    r = checkpoints.restore(path, {"w": jnp.zeros(4, jnp.bfloat16)})
+    assert r["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(r["w"], np.float32),
+                                  np.asarray(vals, np.float32))
+    # a bf16 template refuses a file whose leaf was not stored as f32
+    checkpoints.save(str(tmp_path / "f64"), {"w": np.zeros(4, np.float64)})
+    with pytest.raises(CheckpointError, match="bf16 leaves are stored"):
+        checkpoints.restore(str(tmp_path / "f64"),
+                            {"w": jnp.zeros(4, jnp.bfloat16)})
+
+
+# ---------------------------------------------------------------------------
+# full-engine pack/unpack + the periodic Checkpointer
+# ---------------------------------------------------------------------------
+def test_engine_checkpoint_roundtrip(tmp_path):
+    params = {"w": jnp.full((3,), 2.0)}
+    state = isgd_init(momentum(0.9), ISGDConfig(n_batches=4), params)
+    sched = {"table": jnp.arange(4.0)}
+    path = checkpoints.save_engine(
+        str(tmp_path / "eng"), params=params, state=state, step=17,
+        sched_state=sched, server={"version": 17, "pushed": {0: 9, 1: 8}})
+    ck = checkpoints.restore_engine(
+        path, params_like=jax.tree.map(jnp.zeros_like, params),
+        state_like=jax.tree.map(jnp.zeros_like, state),
+        sched_like={"table": jnp.zeros(4)})
+    assert ck.step == 17
+    assert ck.server == {"version": 17, "pushed": {0: 9, 1: 8}}
+    np.testing.assert_array_equal(np.asarray(ck.params["w"]), 2.0)
+    np.testing.assert_array_equal(np.asarray(ck.sched_state["table"]),
+                                  np.arange(4.0))
+    assert int(ck.state.iter) == int(state.iter)
+
+
+def test_restore_engine_rejects_plain_checkpoint(tmp_path):
+    path = checkpoints.save(str(tmp_path / "plain"), {"w": jnp.ones(2)})
+    with pytest.raises(CheckpointError, match="not a full-engine"):
+        checkpoints.restore_engine(path, params_like={"w": jnp.zeros(2)},
+                                   state_like={})
+
+
+def test_checkpointer_cadence_latest_prune(tmp_path):
+    params = {"w": jnp.ones(2)}
+    state = isgd_init(momentum(0.9), ISGDConfig(n_batches=4), params)
+    ck = Checkpointer(str(tmp_path), every=5, keep=2)
+    for step in range(1, 23):
+        ck.maybe_save(step, params=params, state=state)
+    # boundary crossings at 5, 10, 15, 20; keep=2 prunes to the last two
+    assert ck.steps() == [15, 20]
+    assert ck.latest().endswith("ckpt_00000020.npz")
+    # chunked cadence: chunk boundaries cross marks even when every does
+    # not divide the chunk size
+    ck2 = Checkpointer(str(tmp_path / "chunky"), every=6, keep=0)
+    for step in (4, 8, 12, 16):
+        ck2.maybe_save(step, params=params, state=state)
+    assert ck2.steps() == [8, 12]           # marks 6 and 12, first boundary past
+    # mark() anchors a resumed run so the next boundary is measured from it
+    ck3 = Checkpointer(str(tmp_path / "resumed"), every=5)
+    ck3.mark(16)
+    assert ck3.maybe_save(17, params=params, state=state) is None
+    assert ck3.maybe_save(21, params=params, state=state) is not None

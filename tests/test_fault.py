@@ -1,0 +1,312 @@
+"""Fault injection + elastic recovery (ISSUE 7).
+
+Covers the three tentpole pieces end to end on tiny problems:
+
+  * ``repro.fault`` — deterministic, seeded, one-shot fault plans;
+  * eviction/re-striping — hang-past-deadline and crash faults under an
+    elastic gate complete on survivors, with the event log naming who was
+    evicted and why; non-elastic gates fail fast with a diagnostic naming
+    the stalled worker (the old behavior was a silent 120 s spin);
+  * durability — corrupt/transient pushes are absorbed bit-exactly by
+    checksum-verify + bounded retry, server snapshots round-trip, and the
+    kill/resume parity legs are pinned into the tier-1 suite.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ISGDConfig
+from repro.data import FCPRSampler
+from repro.distributed.async_ps import (AsyncPSCoordinator, ParamServer,
+                                        StalenessGate, WorkerEvicted,
+                                        WorkerFailure, WorkerStalled)
+from repro.fault import FaultEvent, FaultPlan, InjectedCrash
+from repro.optim import momentum
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: spec grammar, seeded reproducibility, one-shot semantics
+# ---------------------------------------------------------------------------
+def test_fault_plan_from_spec():
+    plan = FaultPlan.from_spec(
+        "crash@2:5; hang@1:8:seconds=1.5; slow@0:0:factor=3:until=9")
+    kinds = [(e.kind, e.worker, e.step) for e in plan.events]
+    assert kinds == [("crash", 2, 5), ("hang", 1, 8), ("slow", 0, 0)]
+    assert plan.events[1].seconds == 1.5
+    assert plan.events[2].factor == 3.0 and plan.events[2].until == 9
+    assert not FaultPlan.from_spec("")          # empty spec = no faults
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.from_spec("explode@0:1")
+    with pytest.raises(ValueError, match="bad fault spec"):
+        FaultPlan.from_spec("crash@0:1:wat=2")
+
+
+def test_fault_plan_random_seeded():
+    a = FaultPlan.random(4, 20, seed=7, crashes=1, hangs=1)
+    b = FaultPlan.random(4, 20, seed=7, crashes=1, hangs=1)
+    assert a.events == b.events                 # reproducible in the seed
+    assert len({e.worker for e in a.events}) == 2   # distinct workers
+    assert all(4 <= e.step < 16 for e in a.events)  # middle [0.2, 0.8)
+    c = FaultPlan.random(4, 20, seed=8, crashes=1, hangs=1)
+    assert c.events != a.events
+    with pytest.raises(AssertionError, match="survive"):
+        FaultPlan.random(2, 20, seed=0, crashes=1, hangs=1)
+
+
+def test_fault_plan_one_shot_and_reset():
+    plan = FaultPlan([FaultEvent(kind="corrupt", worker=0, step=1)])
+    tree = {"w": jnp.zeros(3)}
+    out1 = plan.on_transit(0, 1, tree)
+    assert float(out1["w"][0]) == 1e3           # corrupted once
+    out2 = plan.on_transit(0, 1, tree)
+    assert float(out2["w"][0]) == 0.0           # one-shot: retry sees clean
+    plan.reset()
+    out3 = plan.on_transit(0, 1, tree)
+    assert float(out3["w"][0]) == 1e3
+
+
+def test_slow_factor_windows():
+    plan = FaultPlan([FaultEvent(kind="slow", worker=1, step=2, factor=2.0,
+                                 until=4),
+                      FaultEvent(kind="slow", worker=1, step=3, factor=3.0)])
+    assert plan.slow_factor(1, 1) == 1.0
+    assert plan.slow_factor(1, 2) == 2.0
+    assert plan.slow_factor(1, 3) == 6.0        # windows compose
+    assert plan.slow_factor(1, 5) == 3.0        # first window closed
+    assert plan.slow_factor(0, 3) == 1.0        # per-worker targeting
+
+
+# ---------------------------------------------------------------------------
+# gate: stall diagnostics (non-elastic) and eviction (elastic)
+# ---------------------------------------------------------------------------
+def test_gate_stall_raises_diagnostic_not_spin():
+    """A dead worker no longer deadlocks its peer behind a silent
+    cv.wait(120): the waiter gets a WorkerStalled naming the stalled worker
+    and its last completed step."""
+    gate = StalenessGate(2, max_staleness=0, deadline_s=0.2)
+    gate.finish(1)                              # worker 1 completed step 0
+    # worker 0 never finishes step 0 and never heartbeats; worker 1 blocks
+    # on starting step 1
+    err = []
+    t = threading.Thread(target=lambda: err.append(
+        pytest.raises(WorkerStalled, gate.start, 1, 1)))
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive() and len(err) == 1
+    msg = str(err[0].value)
+    assert "worker 0 stalled" in msg and "last completed step 0" in msg
+
+
+def test_gate_waiting_worker_is_not_stalled():
+    """Waiting at the gate refreshes the waiter's own heartbeat — two
+    workers in lockstep never evict each other just for being blocked."""
+    gate = StalenessGate(2, max_staleness=0, deadline_s=0.2, elastic=True)
+    done = []
+
+    def worker(wid):
+        for k in range(6):
+            gate.start(wid, k)
+            time.sleep(0.08)                    # step > poll interval
+            gate.finish(wid)
+        done.append(wid)
+
+    ts = [threading.Thread(target=worker, args=(w,)) for w in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=10)
+    assert sorted(done) == [0, 1] and gate.evictions() == {}
+
+
+def test_gate_elastic_evicts_and_unblocks():
+    gate = StalenessGate(2, max_staleness=0, deadline_s=0.2, elastic=True)
+    evicted = []
+    gate._on_evict = lambda wid, last, survivors, reason: \
+        evicted.append((wid, last, survivors))
+    gate.finish(1)
+    gate.start(1, 1)                            # blocks, then evicts worker 0
+    assert evicted == [(0, 0, [1])]
+    assert 0 in gate.evictions() and gate.active_workers() == [1]
+    gate.finish(0)                              # late finish: ignored
+    assert gate._done[0] == 0
+    with pytest.raises(WorkerEvicted):
+        gate.start(0, 1)                        # evictee unwinds at the gate
+    with pytest.raises(WorkerEvicted):
+        gate.heartbeat(0)                       # ... or at its next heartbeat
+
+
+# ---------------------------------------------------------------------------
+# server: eviction fence, snapshot round-trip
+# ---------------------------------------------------------------------------
+def _tiny_server(**kw):
+    params = {"w": jnp.zeros(3)}
+    srv = ParamServer(params, momentum(0.9).init(params),
+                      ISGDConfig(n_batches=4), **kw)
+    return params, srv
+
+
+def test_server_fences_evicted_worker():
+    params, srv = _tiny_server()
+    snap = srv.pull()
+    srv.push(snap, {"w": jnp.ones(3)}, snap.base, worker=0, metrics={})
+    srv.mark_evicted(1)
+    stale = srv.pull()
+    with pytest.raises(WorkerEvicted):
+        srv.push(stale, {"w": jnp.full(3, 9.0)}, stale.base, worker=1,
+                 metrics={})
+    np.testing.assert_array_equal(np.asarray(srv.params["w"]), 1.0)
+    assert srv.pushed_clocks() == {0: 1}        # the fenced push never landed
+
+
+def test_server_snapshot_roundtrip():
+    params, srv = _tiny_server()
+    for i in range(3):
+        snap = srv.pull()
+        srv.observe(jnp.asarray(float(i)))
+        srv.push(snap, {"w": jnp.full(3, float(i))}, snap.base,
+                 worker=i % 2, metrics={"accelerated": True, "sub_iters": 2})
+    snap = srv.engine_snapshot()
+    assert snap["version"] == 3 and snap["pushed"] == {0: 2, 1: 1}
+    _, srv2 = _tiny_server()
+    srv2.load_snapshot(snap)
+    assert srv2.version == 3 and srv2.pushed_clocks() == {0: 2, 1: 1}
+    np.testing.assert_array_equal(np.asarray(srv2.params["w"]),
+                                  np.asarray(srv.params["w"]))
+    s1, s2 = srv.isgd_state(), srv2.isgd_state()
+    assert int(s2.accel_count) == int(s1.accel_count) == 3
+    np.testing.assert_array_equal(np.asarray(s1.queue.buf),
+                                  np.asarray(s2.queue.buf))
+
+
+# ---------------------------------------------------------------------------
+# coordinator end-to-end: crash/hang recovery, retry, tracebacks
+# ---------------------------------------------------------------------------
+def _coord_problem(n_batches=4, batch=16):
+    rng = np.random.RandomState(0)
+    dim = 5
+    xs = rng.randn(batch * n_batches, dim).astype(np.float32)
+    ys = ((xs @ rng.randn(dim, 1).astype(np.float32)).ravel()
+          / np.sqrt(dim)).astype(np.float32)
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch, seed=1)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params0 = {"w": jnp.zeros((dim,), jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    icfg = ISGDConfig(n_batches=sampler.n_batches, k_sigma=1.5, stop=3)
+    return loss_fn, params0, sampler, icfg
+
+
+def _coord(loss_fn, icfg, **kw):
+    return AsyncPSCoordinator(loss_fn, momentum(0.9), icfg,
+                              lr_fn=lambda pb: jnp.asarray(0.01), **kw)
+
+
+def test_elastic_crash_self_evicts_and_run_completes():
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    plan = FaultPlan.from_spec("crash@1:2")
+    coord = _coord(loss_fn, icfg, workers=2, max_staleness=1, elastic=True,
+                   faults=plan)
+    params, state, records = coord.run(params0, sampler, 16)
+    kinds = [e["event"] for e in coord.events]
+    assert kinds == ["evict", "crash"]
+    assert coord.events[0]["worker"] == 1
+    assert coord.events[0]["survivors"] == [0]
+    assert "InjectedCrash" in coord.events[1]["error"]
+    assert "before_step" in coord.events[1]["traceback"]
+    # worker 1 landed 2 of its 8 pushes; worker 0 all 8
+    assert len(records) == 10
+    assert int(state.iter) == 10
+
+
+def test_elastic_hang_past_deadline_evicted_and_restriped():
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    plan = FaultPlan.from_spec("hang@0:2:seconds=1.0")
+    coord = _coord(loss_fn, icfg, workers=2, max_staleness=0, elastic=True,
+                   deadline_s=0.25, faults=plan)
+    t0 = time.perf_counter()
+    params, state, records = coord.run(params0, sampler, 16)
+    dt = time.perf_counter() - t0
+    evicts = [e for e in coord.events if e["event"] == "evict"]
+    assert len(evicts) == 1 and evicts[0]["worker"] == 0
+    assert "deadline" in evicts[0]["reason"]
+    assert dt < 5.0                             # survivor did not wait out 120s
+    # survivor re-striped to stride 1 → it now serves the FULL cycle: its
+    # pushes after the eviction cover both parities of the global index
+    assert len(records) == 10                   # 2 from w0 + 8 from w1
+
+
+def test_non_elastic_stall_surfaces_worker_stalled():
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    plan = FaultPlan.from_spec("hang@0:2:seconds=1.2")
+    coord = _coord(loss_fn, icfg, workers=2, max_staleness=0, elastic=False,
+                   deadline_s=0.25, faults=plan)
+    with pytest.raises(WorkerFailure) as ei:
+        coord.run(params0, sampler, 16)
+    assert isinstance(ei.value.original, WorkerStalled)
+    assert "worker 0 stalled" in str(ei.value)
+
+
+def test_last_survivor_crash_fails_run_with_traceback():
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    coord = _coord(loss_fn, icfg, workers=1, elastic=True,
+                   faults=FaultPlan.from_spec("crash@0:3"))
+    with pytest.raises(WorkerFailure) as ei:
+        coord.run(params0, sampler, 8)
+    assert ei.value.wid == 0
+    assert isinstance(ei.value.original, InjectedCrash)
+    assert isinstance(ei.value.__cause__, InjectedCrash)   # chained
+    assert "worker thread traceback" in str(ei.value)
+    assert "before_step" in str(ei.value)       # the dead thread's frames
+
+
+def test_corrupt_and_transient_pushes_retry_bit_exact():
+    """A corrupted delta is rejected by checksum and resent clean; a
+    transient transport failure is retried — neither perturbs the
+    trajectory by a single bit."""
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    clean = _coord(loss_fn, icfg, workers=1, verify_pushes=True)
+    p_ref, s_ref, r_ref = clean.run(params0, sampler, 8)
+
+    plan = FaultPlan.from_spec("corrupt@0:1;transient@0:3")
+    faulty = _coord(loss_fn, icfg, workers=1, verify_pushes=True, faults=plan)
+    p, s, r = faulty.run(params0, sampler, 8)
+    assert len(r) == len(r_ref) == 8
+    for a, b in zip((p_ref, s_ref.base), (p, s.base)):
+        for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_retry_exhaustion_surfaces_as_failure():
+    loss_fn, params0, sampler, icfg = _coord_problem()
+    # corrupt every attempt: 1 + push_retries transits all fire
+    plan = FaultPlan([FaultEvent(kind="corrupt", worker=0, step=1)
+                      for _ in range(4)])
+    coord = _coord(loss_fn, icfg, workers=1, verify_pushes=True, faults=plan,
+                   push_retries=2)
+    with pytest.raises(WorkerFailure, match="failed after 3 attempts"):
+        coord.run(params0, sampler, 4)
+
+
+# ---------------------------------------------------------------------------
+# kill/resume parity pinned into tier-1 (full sweep in CI's fault leg)
+# ---------------------------------------------------------------------------
+def test_resume_parity_per_step_and_async():
+    from repro.train import run_resume_parity
+    results = run_resume_parity(18, 6, legs=("per-step", "async-ps"))
+    assert all(r["ok"] for r in results), results
+    assert sum(r["accelerations"] for r in results) > 0
+
+
+@pytest.mark.slow
+def test_resume_parity_all_engines():
+    from repro.train import run_resume_parity
+    results = run_resume_parity(30, 10)
+    assert all(r["ok"] for r in results), results
