@@ -1,0 +1,229 @@
+"""Serving benchmark: continuous batching vs batch-blocking one-shot
+generate, plus hot-snapshot-swap latency impact.
+
+Workload: requests with 4x-varying prompt lengths ({1,2,4}x base) and
+4x-varying token budgets ({1,4}x base), decorrelated so every prompt-length
+bucket mixes short and long budgets — the regime where static batching
+pays head-of-line blocking.
+
+Legs (same model, same params, same request set):
+
+  * ``oneshot``    — the seed engine with the best static policy available
+                     to it: arrival-order chunks of ``max_batch``, length-
+                     bucketed into rectangular sub-batches, each sub-batch
+                     decoding to its *longest* member's budget (short rows
+                     block until the longest finishes).  tok/s counts only
+                     useful (requested) tokens.
+  * ``continuous`` — ``repro.serve.ContinuousScheduler``: per-request
+                     admission into preallocated KV slots, retire on budget,
+                     no head-of-line blocking.  Also records per-token
+                     latency p50/p95.
+  * ``swap``       — the continuous leg re-run while the driver publishes a
+                     fresh snapshot every ``--publish-every-steps`` scheduler
+                     steps (the train-and-serve loop with a deterministic
+                     publisher).  Records swap count, generations served,
+                     per-token p50/p95, and the latency of swap-adjacent
+                     decode steps vs quiet steps — the stall a request sees
+                     when params are hot-swapped under it.
+
+``--smoke`` is the CI leg: reduced workload, asserts continuous tok/s beats
+the one-shot baseline (exit 1 otherwise).  Writes ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_workload(n, base_plen, base_steps, vocab, seed=0):
+    """Prompt lengths {1,2,4}x by i%3; budgets {1,4}x by i%2 — decorrelated
+    (gcd(2,3)=1), so every length bucket mixes short and long budgets."""
+    from repro.serve import Request
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        plen = base_plen * (1, 2, 4)[i % 3]
+        steps = base_steps * (1, 4)[i % 2]
+        prompt = rng.randint(0, vocab, size=(plen,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=steps))
+    return reqs
+
+
+def run_oneshot_bucketed(engine, reqs, max_batch):
+    """Static batching baseline.  -> (useful_tokens, wall_seconds)."""
+    def once():
+        useful = 0
+        for c in range(0, len(reqs), max_batch):
+            groups = {}
+            for r in reqs[c:c + max_batch]:
+                groups.setdefault(len(r.prompt), []).append(r)
+            for rs in groups.values():
+                prompts = np.stack([r.prompt for r in rs])
+                engine.generate(prompts,
+                                steps=max(r.max_new_tokens for r in rs))
+                useful += sum(r.max_new_tokens for r in rs)
+        return useful
+    once()                                   # warmup: identical shapes
+    t0 = time.perf_counter()
+    useful = once()
+    return useful, time.perf_counter() - t0
+
+
+def pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def lat_stats(comps):
+    gaps = [t for c in comps for t in c.token_times[1:]]
+    return {"p50_ms": pct(gaps, 50) * 1e3, "p95_ms": pct(gaps, 95) * 1e3}
+
+
+def run_continuous(model, params, reqs, args, *, watcher=None,
+                   publish=None, publish_every_steps=0):
+    """-> (scheduler, result dict).  With ``publish`` set, a new snapshot is
+    published every ``publish_every_steps`` scheduler steps (between timed
+    steps — writer cost is not serving cost) and per-step walls are split
+    into swap-adjacent vs quiet."""
+    from repro.serve import ContinuousScheduler, Request
+    sched = ContinuousScheduler(
+        model, params, max_batch=args.max_batch, max_seq=args.max_seq,
+        watcher=watcher, swap_poll_every=2)
+    plens = sorted({len(r.prompt) for r in reqs})
+    sched.warmup([Request(rid=-1 - i, prompt=np.zeros(p, np.int32),
+                          max_new_tokens=2) for i, p in enumerate(plens)])
+    for r in reqs:
+        assert sched.submit(r)
+    swap_walls, quiet_walls = [], []
+    t0 = time.perf_counter()
+    while sched.pending:
+        if publish is not None and sched.step_count % publish_every_steps == 0:
+            publish()
+        n_swaps = len(sched.swap_events)
+        ts = time.perf_counter()
+        sched.step()
+        (swap_walls if len(sched.swap_events) > n_swaps
+         else quiet_walls).append(time.perf_counter() - ts)
+    wall = time.perf_counter() - t0
+    comps = sorted(sched.completions, key=lambda c: c.rid)
+    n_tok = sum(len(c.tokens) for c in comps)
+    res = {"tokens": n_tok, "wall_s": wall, "tok_s": n_tok / wall,
+           **lat_stats(comps)}
+    if publish is not None:
+        res.update({
+            "n_swaps": len(sched.swap_events),
+            "generations_served": sorted({c.gen_finished for c in comps}),
+            "swap_load_s": [ev.load_seconds for ev in sched.swap_events],
+            "swap_step_p50_ms": pct(swap_walls, 50) * 1e3,
+            "swap_step_p95_ms": pct(swap_walls, 95) * 1e3,
+            "quiet_step_p50_ms": pct(quiet_walls, 50) * 1e3,
+            "quiet_step_p95_ms": pct(quiet_walls, 95) * 1e3,
+            "swap_step_p95_delta_ms":
+                (pct(swap_walls, 95) - pct(quiet_walls, 95)) * 1e3,
+        })
+    return sched, res
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="transformer",
+                    help="paper_transformer zoo family")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--publish-every-steps", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: reduced workload, assert continuous beats "
+                         "oneshot")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+
+    import jax
+    from repro.configs import zoo_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine, SnapshotWatcher, publish_pointer
+    from repro.train.checkpoints import save as ckpt_save
+
+    cfg = zoo_config(args.model, "tiny")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), max_seq=args.max_seq)
+    reqs = make_workload(args.requests, args.prompt_len, args.decode_steps,
+                         cfg.vocab_size)
+
+    useful, wall = run_oneshot_bucketed(
+        ServeEngine(model, params, max_seq=args.max_seq), reqs,
+        args.max_batch)
+    oneshot = {"tokens": useful, "wall_s": wall, "tok_s": useful / wall}
+    print(f"oneshot(bucketed): {useful} useful tok in {wall:.2f}s "
+          f"({oneshot['tok_s']:.1f} tok/s)")
+
+    _, cont = run_continuous(model, params, reqs, args)
+    print(f"continuous: {cont['tokens']} tok in {cont['wall_s']:.2f}s "
+          f"({cont['tok_s']:.1f} tok/s) p50={cont['p50_ms']:.2f}ms "
+          f"p95={cont['p95_ms']:.2f}ms")
+
+    # swap leg: deterministic publisher — a fresh snapshot every
+    # publish_every_steps scheduler steps, picked up by the watcher poll
+    with tempfile.TemporaryDirectory() as pub:
+        n_pub = [0]
+
+        def publish():
+            n_pub[0] += 1
+            path = os.path.join(pub, f"ckpt_{n_pub[0]:08d}.npz")
+            ckpt_save(path, {"params": params},
+                      extra={"step": n_pub[0] * 100})
+            publish_pointer(pub, path)
+
+        publish()
+        watcher = SnapshotWatcher(pub, params_like=params)
+        sched, swap = run_continuous(
+            model, params, reqs, args, watcher=watcher, publish=publish,
+            publish_every_steps=args.publish_every_steps)
+    print(f"swap leg: {swap['n_swaps']} swaps, generations "
+          f"{swap['generations_served']}, p95 {swap['p95_ms']:.2f}ms, "
+          f"swap-step p95 {swap['swap_step_p95_ms']:.2f}ms vs quiet "
+          f"{swap['quiet_step_p95_ms']:.2f}ms "
+          f"(delta {swap['swap_step_p95_delta_ms']:+.2f}ms)")
+
+    speedup = cont["tok_s"] / oneshot["tok_s"]
+    payload = {
+        "mode": "smoke" if args.smoke else "full",
+        "config": {"model": cfg.name, "requests": args.requests,
+                   "prompt_lens": sorted({len(r.prompt) for r in reqs}),
+                   "budgets": sorted({r.max_new_tokens for r in reqs}),
+                   "max_batch": args.max_batch, "max_seq": args.max_seq,
+                   "devices": jax.device_count()},
+        "oneshot": oneshot, "continuous": cont, "swap": swap,
+        "speedup_continuous_vs_oneshot": speedup,
+        "speedup_bar": 1.0,
+        "speedup_ok": speedup >= 1.0,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"wrote {args.out}")
+    print(f"continuous is {speedup:.2f}x the bucketed one-shot baseline "
+          f"({'OK' if speedup >= 1.0 else 'BELOW 1.0x BAR'})")
+    try:
+        from common import save_json
+        save_json("serve", payload)
+    except Exception:
+        pass
+    if args.smoke and speedup < 1.0:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,10 @@
 families (dense GQA / MLA / MoE / SSM / hybrid / sliding-window).
 
   PYTHONPATH=src python examples/serve_demo.py [--archs mamba2-2.7b,...]
+
+``--continuous`` runs the same workload through the continuous-batching
+scheduler instead (mixed budgets on fewer slots than requests — requests
+join and leave between decode steps; see src/repro/serve/README.md).
 """
 import argparse
 import time
@@ -11,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ContinuousScheduler, Request, ServeEngine
 
 DEFAULT = "internlm2-1.8b,deepseek-v2-lite-16b,mamba2-2.7b,gemma3-12b"
 
@@ -22,6 +26,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve request-by-request through the slot "
+                         "scheduler (2 slots, varied budgets)")
     args = ap.parse_args()
 
     rng = np.random.RandomState(0)
@@ -29,9 +36,23 @@ def main():
         cfg = get_config(arch).reduced()
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0), max_seq=64)
-        engine = ServeEngine(model, params, max_seq=64)
         prompts = rng.randint(0, cfg.vocab_size,
                               size=(args.batch, args.prompt_len)).astype(np.int32)
+        if args.continuous:
+            sched = ContinuousScheduler(model, params, max_batch=2,
+                                        max_seq=64)
+            reqs = [Request(rid=i, prompt=p,
+                            max_new_tokens=max(1, args.steps // (1 + i % 2)))
+                    for i, p in enumerate(prompts)]
+            t0 = time.perf_counter()
+            comps = sched.run(reqs)
+            dt = time.perf_counter() - t0
+            n = sum(len(c.tokens) for c in comps)
+            print(f"{arch:24s} [{cfg.family:7s}] {len(reqs)} reqs / {n} "
+                  f"tokens in {dt:5.1f}s ({n/dt:5.1f} tok/s)  "
+                  f"sample: {np.asarray(comps[0].tokens[:6])}")
+            continue
+        engine = ServeEngine(model, params, max_seq=64)
         t0 = time.perf_counter()
         out = engine.generate(prompts, steps=args.steps)
         dt = time.perf_counter() - t0

@@ -1,7 +1,33 @@
-"""Serving launcher: batched prefill + decode against a KV cache.
+"""Serving launcher: one-shot batched generate, or the continuous-batching
+slot engine with hot snapshot swap (train-and-serve).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --reduced \
-      --batch 4 --prompt-len 32 --decode-steps 16
+One-shot (the seed path — whole batch prefilled together, decode blocks
+until every row finishes):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --reduced \\
+      --engine oneshot --batch 4 --prompt-len 32 --decode-steps 16
+
+Continuous batching (request-level admission into preallocated KV slots;
+``repro.serve.scheduler``):
+
+  PYTHONPATH=src python -m repro.launch.serve --model transformer \\
+      --requests 16 --mixed-lengths --max-decode-batch 8
+
+Train-and-serve — run concurrently with a trainer publishing snapshots:
+
+  PYTHONPATH=src python -m repro.launch.train --model transformer \\
+      --steps 200 --publish-dir /tmp/pub --publish-every 20 &
+  PYTHONPATH=src python -m repro.launch.serve --model transformer \\
+      --watch --publish-dir /tmp/pub --requests 32
+
+``--watch`` blocks until the first published snapshot, then hot-swaps each
+newer one between decode steps (in-flight requests keep their KV; each
+completion records the snapshot generations that served it).
+
+``--kernels`` honors the same kernel-selection contract as training
+(``repro.kernels.policy``): ``pallas`` resolves to the reference paths
+off-TPU.  Timed throughput excludes compile: a warmup pass runs first and
+its wall (≈ jit compile) is reported separately.
 """
 from __future__ import annotations
 
@@ -9,41 +35,183 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import ZOO_MODELS, ZOO_TIERS, get_config, zoo_config
 from repro.models import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve import (ContinuousScheduler, Request, ServeEngine,
+                         SnapshotWatcher)
+
+
+def build_cfg(args):
+    if (args.arch is None) == (args.model is None):
+        raise SystemExit("pass exactly one of --arch or --model")
+    if args.model is not None:
+        if args.reduced:
+            raise SystemExit("--reduced applies to --arch configs; the zoo "
+                             "CPU tier is --tier tiny")
+        return zoo_config(args.model, args.tier)
+    cfg = get_config(args.arch)
+    return cfg.reduced() if args.reduced else cfg
+
+
+def workload(args, vocab: int) -> list[Request]:
+    """Deterministic request set.  ``--mixed-lengths`` varies prompt length
+    and token budget 4x (the regime where request-level batching beats the
+    batch-blocking one-shot engine)."""
+    rng = np.random.RandomState(0)
+    reqs = []
+    for i in range(args.requests):
+        if args.mixed_lengths:
+            plen = args.prompt_len * (1, 2, 4)[i % 3]
+            steps = max(1, args.decode_steps * (4, 1, 2)[i % 3] // 4)
+        else:
+            plen, steps = args.prompt_len, args.decode_steps
+        prompt = rng.randint(0, vocab, size=(plen,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=steps))
+    return reqs
+
+
+def run_oneshot(args, cfg, model, params):
+    engine = ServeEngine(model, params, max_seq=args.max_seq)
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    # warmup: same shapes as the timed run, so the timed wall is all decode
+    t0 = time.perf_counter()
+    engine.generate(prompts, steps=args.decode_steps)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, steps=args.decode_steps)
+    dt = time.perf_counter() - t0
+    n_tok = args.decode_steps * args.batch
+    print(f"arch={cfg.name} engine=oneshot batch={args.batch} "
+          f"prompt={args.prompt_len} decoded={args.decode_steps}")
+    print(f"compile+first-run: {compile_s:.2f}s (excluded from tok/s)")
+    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    print("sample continuation:", out[0, args.prompt_len:
+                                      args.prompt_len + args.decode_steps])
+
+
+def percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def run_continuous(args, cfg, model, params, watcher):
+    reqs = workload(args, cfg.vocab_size)
+
+    sched = ContinuousScheduler(
+        model, params, max_batch=args.max_batch, max_seq=args.max_seq,
+        max_decode_batch=args.max_decode_batch, max_queue=args.max_queue,
+        watcher=watcher, swap_poll_every=args.swap_poll_every)
+
+    # warmup on the same scheduler (jit caches are per-SlotKV instance):
+    # a miniature copy of the workload covers every prompt-length bucket,
+    # so the timed run below is compile-free
+    t0 = time.perf_counter()
+    plens = sorted({len(r.prompt) for r in reqs})
+    sched.warmup([Request(rid=-1 - i, prompt=np.zeros(p, np.int32),
+                          max_new_tokens=2) for i, p in enumerate(plens)])
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comps = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(c.tokens) for c in comps)
+    lat = [t for c in comps for t in c.token_times[1:]]   # steady-state gaps
+    gens = sorted({c.gen_finished for c in comps})
+    print(f"arch={cfg.name} engine=continuous requests={len(reqs)} "
+          f"max_batch={args.max_batch} max_decode_batch={sched.max_decode_batch}")
+    print(f"compile+warmup: {compile_s:.2f}s (excluded from tok/s)")
+    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)  "
+          f"per-token latency p50={percentile(lat, 50)*1e3:.1f}ms "
+          f"p95={percentile(lat, 95)*1e3:.1f}ms")
+    print(f"snapshot generations served: {gens or [0]} "
+          f"(swaps: {len(sched.swap_events)})")
+    for ev in sched.swap_events:
+        print(f"  swap @step {ev.step}: generation {ev.generation} "
+              f"(trainer step {ev.trainer_step}, load {ev.load_seconds:.2f}s)")
+    c0 = comps[0]
+    print("sample continuation:", np.asarray(c0.tokens))
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default=None,
+                    help="assigned architecture config (repro.configs)")
+    ap.add_argument("--model", default=None, choices=list(ZOO_MODELS),
+                    help="paper_transformer zoo family (alternative to "
+                         "--arch)")
+    ap.add_argument("--tier", default="tiny", choices=list(ZOO_TIERS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of --arch (CPU)")
+    ap.add_argument("--kernels", default="reference",
+                    choices=["pallas", "reference", "interpret"],
+                    help="hot-spot implementations — the same contract as "
+                         "training (repro.kernels.policy; pallas falls "
+                         "back to reference off-TPU)")
+    ap.add_argument("--precision", default="bf16", choices=["bf16", "f32"],
+                    help="param/compute dtype; must match the trainer's "
+                         "when restoring published snapshots")
+    ap.add_argument("--engine", default="continuous",
+                    choices=["oneshot", "continuous"],
+                    help="oneshot = the seed batch-blocking generate; "
+                         "continuous = slot-based continuous batching")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="oneshot: rows per generate call")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous: workload size")
+    ap.add_argument("--mixed-lengths", action="store_true",
+                    help="continuous: vary prompt length and token budget "
+                         "4x across requests")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--decode-steps", type=int, default=16)
-    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--decode-steps", type=int, default=16,
+                    help="new tokens per request (max_new_tokens)")
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous: preallocated KV slots")
+    ap.add_argument("--max-decode-batch", type=int, default=0,
+                    help="continuous: admission-control cap on concurrently "
+                         "decoding requests (0 = max-batch; the serving "
+                         "mirror of the paper's batch-size knob)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="continuous: bounded request backlog; submits "
+                         "beyond it are shed")
+    ap.add_argument("--watch", action="store_true",
+                    help="poll --publish-dir and hot-swap each newer "
+                         "snapshot between decode steps")
+    ap.add_argument("--publish-dir", default=None)
+    ap.add_argument("--watch-timeout", type=float, default=120.0,
+                    help="seconds to wait for the first published snapshot")
+    ap.add_argument("--swap-poll-every", type=int, default=8,
+                    help="decode steps between watcher polls")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, max_seq=args.max_seq)
-    engine = ServeEngine(model, params, max_seq=args.max_seq)
+    cfg = build_cfg(args)
+    from repro.kernels.policy import kernels_note, resolve_kernels
+    print(kernels_note(args.kernels, resolve_kernels(args.kernels)))
+    model = build_model(
+        cfg, kernels=args.kernels,
+        param_dtype=jnp.float32 if args.precision == "f32" else jnp.bfloat16)
+    params = model.init(jax.random.PRNGKey(0), max_seq=args.max_seq)
 
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
-    t0 = time.perf_counter()
-    out = engine.generate(prompts, steps=args.decode_steps)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"decoded={args.decode_steps} tokens in {dt:.2f}s "
-          f"({args.decode_steps*args.batch/dt:.1f} tok/s)")
-    print("sample continuation:", out[0, args.prompt_len:
-                                      args.prompt_len + args.decode_steps])
+    watcher = None
+    if args.watch:
+        if not args.publish_dir:
+            raise SystemExit("--watch needs --publish-dir")
+        if args.engine != "continuous":
+            raise SystemExit("--watch requires --engine continuous (the "
+                             "one-shot engine has no between-step swap "
+                             "point)")
+        watcher = SnapshotWatcher(args.publish_dir, params_like=params)
+        snap = watcher.wait_for_first(timeout=args.watch_timeout)
+        params = snap.params
+        print(f"serving snapshot generation {snap.generation} "
+              f"(trainer step {snap.step}, {snap.path})")
+
+    if args.engine == "oneshot":
+        run_oneshot(args, cfg, model, params)
+    else:
+        run_continuous(args, cfg, model, params, watcher)
 
 
 if __name__ == "__main__":

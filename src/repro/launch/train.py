@@ -186,15 +186,59 @@ def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
     return state, j
 
 
+class _TeeCheckpointer:
+    """Fan a run's saves out to several ``Checkpointer``s — the
+    crash-recovery directory and the serving publish directory can differ
+    (different cadences, different pruning) without threading two objects
+    through every runner."""
+
+    def __init__(self, ckpts):
+        self.ckpts = ckpts
+        self.directory = ckpts[0].directory
+
+    def maybe_save(self, step, **kw):
+        outs = [c.maybe_save(step, **kw) for c in self.ckpts]
+        return next((o for o in outs if o), None)
+
+    def save(self, step, **kw):
+        return [c.save(step, **kw) for c in self.ckpts][0]
+
+    def mark(self, step):
+        for c in self.ckpts:
+            c.mark(step)
+
+    def latest(self):
+        return self.ckpts[0].latest()
+
+
 def _make_checkpointer(args):
-    """``--checkpoint-dir``/``--checkpoint-every`` → a ``Checkpointer`` (or
-    None when checkpointing is off)."""
-    if not args.checkpoint_dir:
+    """``--checkpoint-dir``/``--checkpoint-every`` → a ``Checkpointer``;
+    ``--publish-dir`` adds (or upgrades to) a *publishing* checkpointer
+    that maintains the atomic ``LATEST`` pointer a serving
+    ``SnapshotWatcher`` polls (train-and-serve).  None when both are off."""
+    import os
+
+    from repro.train.checkpoints import Checkpointer
+    publish_dir = args.publish_dir
+    same = (publish_dir and args.checkpoint_dir and
+            os.path.abspath(publish_dir) == os.path.abspath(args.checkpoint_dir))
+    ckpts = []
+    if args.checkpoint_dir:
+        ckpts.append(Checkpointer(args.checkpoint_dir,
+                                  every=args.checkpoint_every,
+                                  pointer=bool(same)))
+    if publish_dir and not same:
+        every = args.publish_every or args.checkpoint_every
+        if not every:
+            raise SystemExit("--publish-dir needs --publish-every (or "
+                             "--checkpoint-every) to set the snapshot "
+                             "cadence")
+        ckpts.append(Checkpointer(publish_dir, every=every, pointer=True))
+    if not ckpts:
         if args.resume:
             raise SystemExit("--resume needs --checkpoint-dir")
         return None
-    from repro.train.checkpoints import Checkpointer
-    return Checkpointer(args.checkpoint_dir, every=args.checkpoint_every)
+    return ckpts[0] if len(ckpts) == 1 else _TeeCheckpointer(ckpts)
 
 
 def _maybe_resume(args, ckpt, *, params_like, state_like, sched_like=None):
@@ -497,6 +541,16 @@ def main():
                          "at the first step/chunk boundary past each mark; "
                          "async-ps: every N applied pushes, written under "
                          "the server lock).  0 = never")
+    ap.add_argument("--publish-dir", default=None,
+                    help="train-and-serve: directory where full-engine "
+                         "checkpoints are published for a live serving "
+                         "process (atomic LATEST pointer; a "
+                         "repro.serve.SnapshotWatcher hot-swaps each one "
+                         "between decode steps).  May equal "
+                         "--checkpoint-dir")
+    ap.add_argument("--publish-every", type=int, default=0,
+                    help="publish cadence in steps (0 = inherit "
+                         "--checkpoint-every)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the newest complete checkpoint in "
                          "--checkpoint-dir (a resumed run continues the "

@@ -117,22 +117,26 @@ def _attend_chunked(q, k, v, *, causal: bool, window: Optional[int],
 def decode_attend(q, k_cache, v_cache, t, *, window: Optional[int]):
     """Single-token attention against a cache.
 
-    q: (B, 1, H, hd); caches: (B, S, K, hd); t: scalar index of the new token.
+    q: (B, 1, H, hd); caches: (B, S, K, hd); t: index of the new token —
+    a scalar, or a (B,) vector of per-row cursors (continuous-batching
+    slots, where every row of the batch sits at its own position).
     """
     B, _, H, hd = q.shape
     _, S, K, _ = k_cache.shape
+    dv = v_cache.shape[-1]               # MLA: value dim != query dim
     rep = H // K
     qr = q.reshape(B, K, rep, hd)
     s = jnp.einsum("bkrd,bskd->bkrs", qr, k_cache).astype(jnp.float32)
     s *= 1.0 / math.sqrt(hd)
     kpos = jnp.arange(S)
-    mask = kpos <= t
+    tb = jnp.asarray(t, jnp.int32).reshape(-1)[:, None]      # (B,1) or (1,1)
+    mask = kpos[None, :] <= tb
     if window is not None:
-        mask &= kpos > t - window
-    s = jnp.where(mask[None, None, None], s, -1e30)
+        mask &= kpos[None, :] > tb - window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     o = jnp.einsum("bkrs,bskd->bkrd", p, v_cache)
-    return o.reshape(B, 1, H, hd)
+    return o.reshape(B, 1, H, dv)
 
 
 # ---------------------------------------------------------------------------
@@ -176,18 +180,30 @@ def attn_forward(params, cfg, x, positions, *, window, use_rope=True,
 
 
 def attn_decode(params, cfg, x, cache_k, cache_v, t, *, window, use_rope=True):
-    """One-token decode. x: (B, 1, d); caches (B, S, K, hd); returns (out, k, v)."""
+    """One-token decode. x: (B, 1, d); caches (B, S, K, hd); returns (out, k, v).
+
+    ``t`` may be a scalar (all rows at the same position — the one-shot
+    engine) or a (B,) vector of per-row cursors (slot-based continuous
+    batching): the vector path scatters each row's k/v at its own cursor
+    and masks attention per row.
+    """
     B = x.shape[0]
     H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    per_slot = jnp.ndim(t) == 1
     q = (x @ params["wq"]).reshape(B, 1, H, hd)
     k = (x @ params["wk"]).reshape(B, 1, K, hd)
     v = (x @ params["wv"]).reshape(B, 1, K, hd)
     if use_rope:
-        pos = jnp.full((1, 1), t)
+        pos = jnp.asarray(t)[:, None] if per_slot else jnp.full((1, 1), t)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, t, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, t, 0, 0))
+    if per_slot:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, t].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, t].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, t, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, t, 0, 0))
     o = decode_attend(q, cache_k, cache_v, t, window=window)
     return o.reshape(B, 1, H * hd) @ params["wo"], cache_k, cache_v
 
@@ -259,11 +275,42 @@ def mla_forward(params, cfg, x, positions):
     return out, (c_kv, k_rope.squeeze(2))
 
 
+def _mla_attend_decode(params, cfg, q_nope, q_rope, c_kv, k_rope_cache, t):
+    """Single-token MLA attention with per-row cursors ``t`` (B,).
+
+    Expands the latent cache like :func:`_mla_attend` but runs the masked
+    one-token attend (``decode_attend`` with K == H), which supports a
+    vector ``t`` — the chunked path's scalar ``q_offset`` cannot.
+    """
+    B, _, H, dn = q_nope.shape
+    dv = cfg.v_head_dim
+    k_nope = (c_kv @ params["wk_b"]).reshape(B, -1, H, dn)
+    v = (c_kv @ params["wv_b"]).reshape(B, -1, H, dv)
+    k_rope_b = jnp.broadcast_to(k_rope_cache[:, :, None, :],
+                                (B, k_nope.shape[1], H, k_rope_cache.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = decode_attend(q, k, v, t, window=None)
+    return o.reshape(B, 1, H * dv) @ params["wo"]
+
+
 def mla_decode(params, cfg, x, cache_ckv, cache_krope, t):
-    """cache_ckv: (B, S, r); cache_krope: (B, S, dr) — the compressed MLA cache."""
+    """cache_ckv: (B, S, r); cache_krope: (B, S, dr) — the compressed MLA cache.
+
+    ``t`` scalar or (B,) per-row cursors (see :func:`attn_decode`).
+    """
     B = x.shape[0]
-    pos = jnp.full((1, 1), t)
+    per_slot = jnp.ndim(t) == 1
+    pos = jnp.asarray(t)[:, None] if per_slot else jnp.full((1, 1), t)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos)
+    if per_slot:
+        rows = jnp.arange(B)
+        cache_ckv = cache_ckv.at[rows, t].set(c_kv[:, 0].astype(cache_ckv.dtype))
+        cache_krope = cache_krope.at[rows, t].set(
+            k_rope[:, 0, 0].astype(cache_krope.dtype))
+        out = _mla_attend_decode(params, cfg, q_nope, q_rope, cache_ckv,
+                                 cache_krope, t)
+        return out, cache_ckv, cache_krope
     cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, c_kv.astype(cache_ckv.dtype), (0, t, 0))
     cache_krope = jax.lax.dynamic_update_slice(
         cache_krope, k_rope.squeeze(2).astype(cache_krope.dtype), (0, t, 0))

@@ -411,9 +411,19 @@ def S_conv(cfg):
 
 
 def decode_step(params, cfg, cache, tokens):
-    """One decode step. tokens: (B, 1) -> (logits (B, Vp), new cache)."""
+    """One decode step. tokens: (B, 1) -> (logits (B, Vp), new cache).
+
+    ``cache['t']`` is a scalar (one-shot serving: every row at the same
+    position) or a (B,) vector of per-row cursors (slot-based continuous
+    batching — ``repro.serve.slots``); the layer decode paths accept both.
+    """
     prefix_specs, block_specs, n_blocks = stack_plan(cfg)
     t = cache["t"]
+    if jnp.ndim(t) == 1 and cfg.family == "encdec":
+        raise NotImplementedError(
+            "per-slot decode cursors are not supported for enc-dec configs "
+            "(learned pos_embed lookup + cross-attention assume one shared "
+            "position)")
     x = jnp.take(params["embed"], tokens, axis=0)
     if cfg.family == "encdec":
         x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], t, 1, axis=0)[None, 0:1]

@@ -1,3 +1,13 @@
 from repro.serve.engine import ServeEngine, merge_prefill_cache
+from repro.serve.scheduler import (Completion, ContinuousScheduler, Request,
+                                   SwapEvent)
+from repro.serve.slots import SlotKV, admit_cache
+from repro.serve.snapshot import (Snapshot, SnapshotWatcher, publish_pointer,
+                                  read_pointer)
 
-__all__ = ["ServeEngine", "merge_prefill_cache"]
+__all__ = [
+    "ServeEngine", "merge_prefill_cache",
+    "SlotKV", "admit_cache",
+    "Request", "Completion", "SwapEvent", "ContinuousScheduler",
+    "Snapshot", "SnapshotWatcher", "publish_pointer", "read_pointer",
+]

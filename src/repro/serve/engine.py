@@ -57,9 +57,16 @@ class ServeEngine:
         return None
 
     def generate(self, prompts: np.ndarray, steps: int) -> np.ndarray:
-        """prompts: (B, Sp) int32 -> (B, Sp+steps) greedy continuation."""
+        """prompts: (B, Sp) int32 -> (B, Sp+steps) greedy continuation.
+
+        ``steps=0`` returns the prompt unchanged; ``steps=1`` exactly one
+        token (the prefill argmax) — the prefill token counts toward
+        ``steps``, it is not a freebie on top.
+        """
         B, Sp = prompts.shape
         assert Sp + steps <= self.max_seq
+        if steps == 0:
+            return np.asarray(prompts).copy()
         batch = {"tokens": jnp.asarray(prompts)}
         fe = self._frontend(B)
         if fe is not None:

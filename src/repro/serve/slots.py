@@ -1,0 +1,175 @@
+"""Preallocated slot-based KV/state cache for continuous batching.
+
+The decode batch is ``max_batch`` *slots*, allocated once at ``max_seq``
+length.  Each slot holds one in-flight request: its per-layer KV (or SSM
+conv/state) rows, a per-slot position cursor ``t``, an ``active`` flag and
+the last emitted token.  Requests *join* (``admit``) and *leave*
+(``retire``) between decode steps:
+
+  * ``admit`` prefills one request (B=1 exact-length prefill — no padding,
+    so SSM recurrent state is exact) and scatters the prefill cache into
+    the slot's rows via ``dynamic_update_slice`` at a **traced** slot
+    index.  One compile per distinct prompt length; the slot index never
+    triggers recompilation.
+  * ``decode`` runs one fused decode step over all ``max_batch`` slots with
+    per-slot cursors (vector ``t`` through ``transformer.decode_step``).
+    Exactly one compile for the lifetime of the engine — admitting or
+    retiring never flushes in-flight work.
+  * ``retire`` clears the active flag; the slot's cache rows are left as
+    garbage.  This is safe: a retired slot's cursor is parked (``t`` only
+    advances for active slots), attention masks every position ``> t``, the
+    decode write lands *before* the attend so a re-admitted tenant
+    overwrites stale rows as its cursor reaches them, and SSM admit
+    replaces the recurrent state rows wholesale.
+
+``swap_params`` replaces the served weight pytree between decode steps
+(same avals ⇒ no recompile); in-flight KV survives the swap, so a request
+can start under one snapshot generation and finish under another — the
+consistency contract is in ``serve/README.md``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+UNSERVABLE_FAMILIES = ("encdec", "vlm", "audio", "cnn")
+
+
+def _write_slot(buf, new, batch_axis: int, slot):
+    """Scatter a single-request cache array into its slot rows.
+
+    ``buf``: preallocated slot buffer; ``new``: the request's prefill entry
+    (batch axis has size 1, the sequence axis — if any — size <= max_seq).
+    ``slot`` is a traced int32 scalar.
+    """
+    start = tuple(slot if i == batch_axis else 0 for i in range(buf.ndim))
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+
+
+def admit_cache(cache, pre_caches, slot):
+    """Write one request's prefill caches into slot ``slot``.
+
+    Mirrors the ``init_cache`` structure: ``prefix`` entries carry the
+    batch at axis 0, scan-stacked ``blocks`` entries at axis 1 (axis 0 is
+    ``n_blocks``).
+    """
+    prefix_new, blocks_new = pre_caches
+    prefix = [tuple(_write_slot(b, n, 0, slot) for b, n in zip(be, ne))
+              for be, ne in zip(cache["prefix"], prefix_new)]
+    blocks = tuple(tuple(_write_slot(b, n, 1, slot) for b, n in zip(be, ne))
+                   for be, ne in zip(cache["blocks"], blocks_new))
+    return {"prefix": prefix, "blocks": blocks, "t": cache["t"]}
+
+
+class SlotKV:
+    """Slot-based serving state + the three jitted entry points.
+
+    Device state: the slot cache (per-slot ``t`` cursors), ``active``
+    flags, and ``cur_tok`` (each slot's last emitted token — the next
+    decode input).  Host-side, the scheduler owns which request occupies
+    which slot.
+    """
+
+    def __init__(self, model, params, *, max_batch: int, max_seq: int):
+        if model.cfg.family in UNSERVABLE_FAMILIES:
+            raise ValueError(
+                f"slot-based serving supports decoder-only families, not "
+                f"{model.cfg.family!r} (shared-position frontends don't "
+                f"compose with per-slot cursors)")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        cache = model.init_cache(max_batch, max_seq)
+        cache["t"] = jnp.zeros((max_batch,), jnp.int32)   # per-slot cursors
+        self.cache = cache
+        self.active = jnp.zeros((max_batch,), bool)
+        self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
+
+        self._prefill = jax.jit(model.prefill_fn)
+
+        def _admit(cache, active, cur_tok, slot, pre, t0, tok0):
+            cache = admit_cache(cache, pre, slot)
+            cache["t"] = cache["t"].at[slot].set(t0)
+            return (cache, active.at[slot].set(True),
+                    cur_tok.at[slot].set(tok0))
+
+        def _retire(active, slot):
+            return active.at[slot].set(False)
+
+        vocab = model.cfg.vocab_size
+
+        def _decode(params, cache, active, cur_tok):
+            t_prev = cache["t"]
+            logits, cache = model.decode_fn(params, cache, cur_tok[:, None])
+            nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+            # park retired slots: cursor frozen, token frozen (their write
+            # landed at the parked cursor and stays masked/overwritable)
+            cache["t"] = jnp.where(active, t_prev + 1, t_prev)
+            return cache, jnp.where(active, nxt, cur_tok)
+
+        self._admit = jax.jit(_admit, donate_argnums=(0, 1, 2))
+        self._retire = jax.jit(_retire, donate_argnums=(0,))
+        # active is read-only in decode (not returned) — do not donate it
+        self._decode = jax.jit(_decode, donate_argnums=(1, 3))
+
+    # -- request lifecycle --------------------------------------------------
+    def prefill(self, prompt: np.ndarray):
+        """B=1 exact-length prefill -> (first greedy token, pre_caches).
+
+        Compiles once per distinct prompt length (production would bucket;
+        see README).  Kept separate from ``admit`` so the scheduler can
+        time prefill against decode.
+        """
+        logits, pre = self._prefill(self.params,
+                                    {"tokens": jnp.asarray(prompt)[None, :]})
+        tok = int(jnp.argmax(logits[0, :self.model.cfg.vocab_size]))
+        return tok, pre
+
+    def admit(self, slot: int, prompt: np.ndarray) -> int:
+        """Prefill ``prompt`` and install it in ``slot``; returns the first
+        generated token (the prompt's greedy continuation)."""
+        assert len(prompt) < self.max_seq, (len(prompt), self.max_seq)
+        tok, pre = self.prefill(prompt)
+        self.cache, self.active, self.cur_tok = self._admit(
+            self.cache, self.active, self.cur_tok,
+            jnp.asarray(slot, jnp.int32), pre,
+            jnp.asarray(len(prompt), jnp.int32),
+            jnp.asarray(tok, jnp.int32))
+        return tok
+
+    def retire(self, slot: int) -> None:
+        self.active = self._retire(self.active,
+                                   jnp.asarray(slot, jnp.int32))
+
+    def decode(self) -> np.ndarray:
+        """One decode step over all slots -> (max_batch,) next tokens
+        (host).  Retired slots return their frozen last token."""
+        self.cache, self.cur_tok = self._decode(
+            self.params, self.cache, self.active, self.cur_tok)
+        return np.asarray(self.cur_tok)
+
+    def cursor(self, slot: int) -> int:
+        return int(self.cache["t"][slot])
+
+    # -- hot snapshot swap ---------------------------------------------------
+    def swap_params(self, params) -> None:
+        """Swap the served weights between decode steps.  The new pytree
+        must match the old avals (same model config/precision), so the
+        jitted decode is a cache hit — in-flight KV is untouched."""
+        old = jax.tree.leaves(self.params)
+        new = jax.tree.leaves(params)
+        if [(x.shape, x.dtype) for x in old] != [(x.shape, x.dtype) for x in new]:
+            raise ValueError("snapshot params do not match the served "
+                             "model's shapes/dtypes")
+        self.params = params
+
+    # -- introspection -------------------------------------------------------
+    def compile_counts(self) -> dict:
+        """Jit-cache sizes: decode must stay at 1 across the engine's
+        lifetime; admit grows with distinct (not total) prompt lengths."""
+        return {"decode": self._decode._cache_size(),
+                "admit": self._admit._cache_size(),
+                "prefill": self._prefill._cache_size(),
+                "retire": self._retire._cache_size()}

@@ -1,0 +1,118 @@
+"""Snapshot watcher: hot-swap trained params into a running serve loop.
+
+Publish-directory protocol (writer side is ``train/checkpoints.py``):
+
+  * the trainer writes crash-consistent engine checkpoints
+    (``ckpt_<step>.npz``, atomic tmp+fsync+rename, crc32 checksum) into the
+    publish directory via the existing ``Checkpointer``;
+  * after each save it atomically replaces a ``LATEST`` pointer file whose
+    content is the newest checkpoint's *filename* — readers never race a
+    directory listing against pruning.
+
+The watcher polls the pointer; on change it restores **only the params
+subtree** through the checkpoint module's checksum/template-validated
+restore path (extra keys — optimizer base, ψ queue, … — are ignored by the
+template restore), stamps it with a monotonically increasing *generation*
+number, and hands it to the serve loop, which swaps it in between decode
+steps.  A pointed-to file that vanished under pruning, or a checkpoint
+that fails its checksum/template validation, is skipped and retried on the
+next poll — the serve loop keeps running on its current snapshot.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from repro.train.checkpoints import (CheckpointError, load_extra, restore,
+                                     tree_checksum)
+
+LATEST_POINTER = "LATEST"
+
+
+def publish_pointer(directory: str, path: str) -> str:
+    """Atomically point ``directory/LATEST`` at checkpoint ``path``
+    (basename is stored; the pointer and its target share a directory)."""
+    name = os.path.basename(path)
+    target = os.path.join(directory, LATEST_POINTER)
+    tmp = f"{target}.tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, target)
+    return target
+
+
+def read_pointer(directory: str) -> Optional[str]:
+    """-> full path of the pointed-to checkpoint, or None (no pointer yet)."""
+    try:
+        with open(os.path.join(directory, LATEST_POINTER)) as f:
+            name = f.read().strip()
+    except FileNotFoundError:
+        return None
+    return os.path.join(directory, name) if name else None
+
+
+@dataclass
+class Snapshot:
+    """One restored snapshot: the params subtree + its provenance."""
+    params: Any
+    generation: int        # watcher-local monotonic counter (1-based)
+    path: str              # checkpoint file it came from
+    step: int              # trainer step recorded in the checkpoint
+    params_checksum: str   # tree_checksum of the restored params subtree
+
+
+class SnapshotWatcher:
+    """Polls a publish directory and yields validated param snapshots.
+
+    ``params_like`` is the serving model's freshly initialized params — the
+    restore template (shapes/dtypes must match the trainer's, i.e. same
+    config + precision).
+    """
+
+    def __init__(self, publish_dir: str, params_like, *,
+                 min_poll_interval: float = 0.0):
+        self.publish_dir = publish_dir
+        self.params_like = params_like
+        self.min_poll_interval = min_poll_interval
+        self.generation = 0
+        self._last_path: Optional[str] = None
+        self._last_poll = 0.0
+
+    def poll(self) -> Optional[Snapshot]:
+        """-> a new Snapshot when the pointer moved, else None.  Never
+        raises on a torn/pruned/corrupt target — skips and retries."""
+        now = time.monotonic()
+        if now - self._last_poll < self.min_poll_interval:
+            return None
+        self._last_poll = now
+        path = read_pointer(self.publish_dir)
+        if path is None or path == self._last_path:
+            return None
+        try:
+            tree = restore(path, {"params": self.params_like})
+            step = int(load_extra(path).get("step", -1))
+        except CheckpointError:
+            return None                      # pruned or invalid: retry later
+        self._last_path = path
+        self.generation += 1
+        params = tree["params"]
+        return Snapshot(params=params, generation=self.generation, path=path,
+                        step=step,
+                        params_checksum=tree_checksum({"params": params}))
+
+    def wait_for_first(self, timeout: float = 120.0,
+                       poll_every: float = 0.2) -> Snapshot:
+        """Block until the trainer publishes its first snapshot."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            snap = self.poll()
+            if snap is not None:
+                return snap
+            time.sleep(poll_every)
+        raise TimeoutError(
+            f"no snapshot appeared under {self.publish_dir!r} within "
+            f"{timeout:.0f}s (is the trainer running with --publish-dir?)")

@@ -270,12 +270,20 @@ class Checkpointer:
     lands on the first boundary past the mark.  ``latest()`` finds the
     newest complete checkpoint for ``--resume`` (atomic saves guarantee any
     file it finds is complete).
+
+    ``pointer=True`` additionally publishes a ``LATEST`` pointer file
+    (atomic replace) naming the newest checkpoint after every save — the
+    publish-directory protocol a serving ``SnapshotWatcher`` polls
+    (``repro.serve.snapshot``): pruning keeps the ``keep`` newest files, so
+    the pointed-to checkpoint always survives.
     """
 
-    def __init__(self, directory: str, every: int = 0, keep: int = 3):
+    def __init__(self, directory: str, every: int = 0, keep: int = 3,
+                 pointer: bool = False):
         self.directory = directory
         self.every = every
         self.keep = keep
+        self.pointer = pointer
         self._last = 0
         os.makedirs(directory, exist_ok=True)
 
@@ -290,6 +298,9 @@ class Checkpointer:
     def save(self, step: int, **engine_kwargs) -> str:
         out = save_engine(self.path(step), step=step, **engine_kwargs)
         self._last = int(step)
+        if self.pointer:
+            from repro.serve.snapshot import publish_pointer
+            publish_pointer(self.directory, out)
         self._prune()
         return out
 
