@@ -23,6 +23,12 @@ carries the tensor-parallel collectives — the cost the ROADMAP's
 multi-host item will amortize.  ``--smoke`` is the CI mode: a reduced
 (devices × batch) grid, few steps, JSON to ``--out``.
 
+Every cell records its process topology in the JSON schema —
+``num_processes`` and ``local_device_count`` next to ``devices`` — so
+multi-host cells (worker run with ``--coordinator``; the mesh comes from
+the process-aware ``make_training_mesh`` factory) can never be conflated
+with single-host ones in the Eq.21 fits.
+
 Each (devices, batch) cell runs in a fresh child interpreter because
 ``--xla_force_host_platform_device_count`` (the flag that splits the host
 CPU into N XLA devices) must be set before jax initializes; the parent
@@ -58,10 +64,12 @@ def _worker(args) -> None:
     import jax.numpy as jnp
 
     from repro.core import ISGDConfig
-    from repro.data import FCPRSampler, make_classification
+    from repro.data import DeviceRing, FCPRSampler, make_classification
     from repro.distributed import (make_hybrid_step, prefetched,
                                    tensor_axes)
-    from repro.launch.mesh import make_data_mesh, make_host_mesh
+    from repro.distributed.data_parallel import data_axis_size
+    from repro.launch import env as ENV
+    from repro.launch.mesh import make_training_mesh
     from repro.models import cnn_loss_fn, init_cnn
     from repro.optim import momentum
     import dataclasses
@@ -73,11 +81,12 @@ def _worker(args) -> None:
         return
 
     n_dev = len(jax.devices())
-    if args.engine == "hybrid":
-        mesh = make_host_mesh(model=args.model_parallel)
-    else:
-        mesh = make_data_mesh()
-    n_data = mesh.shape["data"]
+    # process-aware factory: single-process -> the historical (data, model)
+    # host mesh; with --coordinator the same cell runs on a (pod, data,
+    # model) mesh over the global device set
+    mesh = make_training_mesh(
+        model=args.model_parallel if args.engine == "hybrid" else 1)
+    n_data = data_axis_size(mesh)
     global_batch = args.per_device_batch * n_data
     cfg = dataclasses.replace(CIFAR_QUICK, image_size=16, channels=3,
                               num_classes=10)
@@ -93,7 +102,14 @@ def _worker(args) -> None:
         from repro.launch import shardings as SH
         params, _ = SH.hybrid_params_placement(mesh, params)
     state = init_fn(params)
-    prefetch = prefetched(sampler, mesh)
+    topo = ENV.topology()
+    if topo.num_processes > 1:
+        # per-step host uploads would be a cross-process coordination
+        # point every step; stripe the epoch onto the ring once instead
+        prefetch = DeviceRing(sampler.epoch_arrays(), global_batch,
+                              mesh=mesh, axis=None, relayout=True)
+    else:
+        prefetch = prefetched(sampler, mesh)
 
     # warmup (compile) then timed steps
     state, params, m = step(state, params, prefetch(0))
@@ -105,7 +121,8 @@ def _worker(args) -> None:
     jax.block_until_ready(m["loss"])
     dt = (time.perf_counter() - t0) / steps
     print(f"RESULT {n_dev} {args.per_device_batch} {dt*1e3:.3f} "
-          f"{global_batch/dt:.1f} {global_batch}", flush=True)
+          f"{global_batch/dt:.1f} {global_batch} "
+          f"{topo.num_processes} {jax.local_device_count()}", flush=True)
 
 
 def _worker_async(args) -> None:
@@ -145,7 +162,8 @@ def _worker_async(args) -> None:
     t0 = time.perf_counter()
     _, _, records = coord.run(params0, sampler, pushes)
     dt = (time.perf_counter() - t0) / len(records)
-    print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f} {b}", flush=True)
+    print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f} {b} "
+          f"1 {jax.local_device_count()}", flush=True)
 
 
 def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
@@ -168,11 +186,13 @@ def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
         capture_output=True, text=True, env=env, cwd=root, timeout=1200)
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT "):
-            _, n, b, ms, sps, gb = line.split()
+            _, n, b, ms, sps, gb, nproc, ldev = line.split()
             return {"engine": engine, "devices": int(n),
                     "model_parallel": model_parallel,
                     "per_device_batch": int(b), "ms_per_step": float(ms),
-                    "samples_per_s": float(sps), "global_batch": int(gb)}
+                    "samples_per_s": float(sps), "global_batch": int(gb),
+                    "num_processes": int(nproc),
+                    "local_device_count": int(ldev)}
     raise RuntimeError(
         f"worker engine={engine} devices={devices} b={per_device_batch} "
         f"failed:\n{proc.stdout}\n{proc.stderr}")
@@ -259,8 +279,11 @@ def main():
     ap.add_argument("--out", default=None,
                     help="also dump the payload JSON to this path "
                          "(CI artifact)")
+    from repro.launch import env as ENV      # jax-free import (parent-safe)
+    ENV.add_process_args(ap)
     args = ap.parse_args()
     if args.worker:
+        ENV.initialize_from_args(args)
         _worker(args)
     elif args.smoke:
         run(args.engine, args.max_staleness, device_counts=(1, 2),

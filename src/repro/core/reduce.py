@@ -87,17 +87,50 @@ class AxisReduce(ReduceCtx):
     needs — ψ/grads averaged over the data sub-mesh while GSPMD handles the
     tensor-parallel axis.  Tuples keep the dataclass hashable, so the jitted
     step still specializes without retracing.
+
+    ``deterministic=True`` replaces the backend all-reduce with an
+    ``all_gather`` + *local* reduction in flat shard order.  A plain
+    ``pmean``'s f32 association is a backend/topology detail — intra-host
+    XLA:CPU reduces in a different order than a cross-process gloo ring, so
+    the same 4 data shards give 1-ulp-different ψ on a ``(4,)`` mesh vs a
+    ``(pod=2, data=2)`` one, and the accelerate ``cond`` can eventually
+    branch apart.  Gathering first pins the association to the flattened
+    shard order (pod-major, matching the global batch's row order), making
+    the reduction a pure function of the shard *values* — bit-identical on
+    any process topology that preserves the data order.  The distributed
+    engines always construct this mode (see
+    ``repro.distributed.data_parallel``); the cost is an all-gather of the
+    grad tree instead of a psum, irrelevant at control-tree sizes but worth
+    revisiting if grads ever dominate the wire.
     """
 
     axis: str | tuple = "data"
+    deterministic: bool = False
+
+    def _gathered(self, x):
+        """x gathered over the data axes: (n_shards, *x.shape), pod-major
+        flat order — the same order the global batch's rows have."""
+        import jax.numpy as jnp
+
+        g = jax.lax.all_gather(x, self.axis, tiled=False)
+        extra = g.ndim - jnp.ndim(x)        # one gathered dim per axis name
+        return g.reshape((-1,) + g.shape[extra:])
 
     def scalar(self, x):
+        if self.deterministic:
+            import jax.numpy as jnp
+            return jnp.mean(self._gathered(x), axis=0)
         return jax.lax.pmean(x, self.axis)
 
     def tree(self, t):
+        if self.deterministic:
+            return jax.tree.map(self.scalar, t)
         return jax.lax.pmean(t, self.axis)
 
     def sum_scalar(self, x):
+        if self.deterministic:
+            import jax.numpy as jnp
+            return jnp.sum(self._gathered(x), axis=0)
         return jax.lax.psum(x, self.axis)
 
 

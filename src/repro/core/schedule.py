@@ -16,13 +16,16 @@ def loss_driven_lr(thresholds: Sequence[float], lrs: Sequence[float]):
     """thresholds descending: lr = lrs[i] for psi_bar >= thresholds[i],
     else lrs[-1].  len(lrs) == len(thresholds) + 1."""
     assert len(lrs) == len(thresholds) + 1
-    th = jnp.asarray(thresholds, jnp.float32)
-    vals = jnp.asarray(lrs, jnp.float32)
+    th = tuple(float(t) for t in thresholds)
+    vals = tuple(float(v) for v in lrs)
 
     def lr_fn(psi_bar):
+        # arrays are built inside the closure, not at factory time: module-
+        # level schedules (ALEXNET_SCHEDULE) must not touch the backend
+        # before a multi-process run calls jax.distributed.initialize
         psi_bar = jnp.asarray(psi_bar, jnp.float32)
-        idx = jnp.sum(psi_bar < th)       # how many thresholds we've dropped below
-        return vals[idx]
+        idx = jnp.sum(psi_bar < jnp.asarray(th, jnp.float32))
+        return jnp.asarray(vals, jnp.float32)[idx]
 
     return lr_fn
 

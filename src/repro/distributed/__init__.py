@@ -7,6 +7,13 @@ asynchronous parameter-server engine (§6.2) in
 ``repro.distributed.async_ps`` (staleness-bounded workers, server-side SPC
 controller, ``w(τ)``-weighted delta folding).
 
+The same synchronous engines run multi-process: ``make_training_mesh``
+builds a 3-D ``(pod, data, model)`` mesh over the global device set,
+``MeshStrategy`` folds the execution-strategy choice behind one dispatch
+point, and ``multihost_parity`` pins N-process × M-device bit-exactness
+against the single-host reference — see ``README.md`` in this package for
+the mesh contract and the FCPR striping invariant.
+
 The reduction contexts themselves live in ``repro.core.reduce`` (so ``core``
 never imports this package); they are re-exported here because callers that
 go distributed pick them together with the engine.
@@ -35,8 +42,12 @@ _EXPORTS = {
     "make_data_parallel_step": "repro.distributed.data_parallel",
     "make_chunked_data_parallel_step": "repro.distributed.data_parallel",
     "run_hybrid_parity": "repro.distributed.hybrid_parity",
+    "run_multihost_parity": "repro.distributed.multihost_parity",
     "batch_sharding": "repro.distributed.data_parallel",
     "replicated": "repro.distributed.data_parallel",
+    "replicate_to_mesh": "repro.distributed.data_parallel",
+    "MeshStrategy": "repro.distributed.data_parallel",
+    "mesh_strategy": "repro.distributed.data_parallel",
     "data_axis_size": "repro.distributed.data_parallel",
     "tensor_axes": "repro.distributed.data_parallel",
     "PrefetchSampler": "repro.distributed.prefetch",

@@ -1,5 +1,7 @@
 """shard_map/GSPMD ISGD engine: pure data parallelism (paper §6, Fig. 8)
-and the hybrid DP × TP regime on a 2-D ``(data, model)`` mesh.
+and the hybrid DP × TP regime on ``(data, model)`` / ``(pod, data, model)``
+meshes — single-host or multi-process (see ``README.md`` in this package
+for the full process-aware contract).
 
 One engine, one step path.  ``make_hybrid_step`` runs the *same* step body
 every other synchronous engine uses — ``train.trainer.make_step_core`` —
@@ -7,15 +9,22 @@ so the loss-driven LR (ψ̄ read from the queue with its one-step lag, Alg.1
 line 19) is identical everywhere.  (Historical note: the old pjit runner
 hand-rolled its own step closure and froze the schedule at ``lr_fn(0.0)``;
 that closure is gone and tests/test_hybrid.py pins the fix.)  The engine
-picks its execution strategy from the mesh:
+picks its execution strategy from the mesh through ONE dispatch point,
+:func:`mesh_strategy`:
 
-  * **manual shard_map over the data axis** — when every non-data axis is
-    trivial (a 1-D ``('data',)`` mesh, or ``(data, model=1)``).  The batch
-    is sharded over ``data`` (leading dim); each device computes
-    loss/gradients on its shard and ``AxisReduce`` pmeans both, so the
-    ``lax.cond`` accelerate predicate and every trip of the subproblem
-    ``while_loop`` see replicated values — the invariant ``core/isgd.py``
-    documents.  Params and ISGD state are replicated.  This is the pure
+  * **manual shard_map over the data axes** — when every non-data axis is
+    trivial (a 1-D ``('data',)`` mesh, ``(data, model=1)``, or
+    ``(pod, data, model=1)``).  The batch is sharded over the data axes
+    (leading dim); each device computes loss/gradients on its shard and
+    ``AxisReduce`` reduces both, so the ``lax.cond`` accelerate predicate
+    and every trip of the subproblem ``while_loop`` see replicated values —
+    the invariant ``core/isgd.py`` documents.  Params and ISGD state are
+    replicated.  The strategy always constructs
+    ``AxisReduce(axes, deterministic=True)``: the gather-then-reduce mode
+    whose f32 association is a pure function of the flat shard order, so a
+    ``(pod=2, data=2)`` two-process mesh reproduces a single-process
+    ``(data=4)`` mesh *bit-exactly* (``core/reduce.py``; pinned by
+    ``repro.distributed.multihost_parity``).  This is the pure
     data-parallel regime the paper scales (its multi-GPU experiments
     replicate the model); ``make_data_parallel_step`` remains as the alias.
 
@@ -28,7 +37,7 @@ picks its execution strategy from the mesh:
     already computes the *global*-batch loss/gradients — GSPMD partitions
     the batch dim over ``data`` and inserts the cross-device reductions
     itself, so ψ and the grads are the same real numbers the manual
-    strategy pmeans together (associated differently in f32; the hybrid
+    strategy reduces together (associated differently in f32; the hybrid
     parity suite bounds the difference and pins bit-exactness on the legs
     where the layouts coincide).
 
@@ -37,8 +46,9 @@ picks its execution strategy from the mesh:
   manual subgroup (``Check failed: sharding.IsManualSubgroup()``), and
   scan is load-bearing everywhere here — the transformer block stack, the
   fused chunk engine, micro-batch accumulation.  The shardy partitioner
-  lifts the limitation; fold the strategies together when it becomes the
-  default.
+  lifts the limitation; :func:`mesh_strategy` is the ONLY place that knows
+  the split exists, so deleting it when shardy becomes the default is a
+  one-function change.
 
 ``make_hybrid_step`` mirrors ``train.trainer.make_train_step`` — same
 ``(init_fn, step_fn)`` contract, same metrics surface — so the host loop,
@@ -50,6 +60,18 @@ table updates replicated by construction, exactly like the accelerate
 cond), the signatures gain a ``sched_state`` pytree, and batches come from
 ``DeviceRing`` epoch arrays instead of host transfers.  ``FCPRSchedule``
 through this path is bit-exact with ``schedule=None``.
+
+**Multi-process notes** — the factories are topology-agnostic; what makes
+a multi-process run work is how the *inputs* are placed:
+
+  * build the mesh with ``repro.launch.mesh.make_training_mesh`` (global
+    devices, process-contiguous pod rows);
+  * pass ``axis=None`` (or an explicit tuple like ``("pod", "data")``) so
+    the strategy reduces over every data sub-axis;
+  * feed batches from a :class:`~repro.data.device_ring.DeviceRing` (each
+    process uploads only its epoch stripe) and replicate params/state with
+    :func:`replicate_to_mesh` — a plain ``device_put`` cannot address
+    other processes' devices.
 """
 from __future__ import annotations
 
@@ -57,6 +79,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -68,87 +91,162 @@ from repro.train.chunked import chunk_over_ring
 from repro.train.trainer import make_step_core
 
 
-def data_axis_size(mesh: Mesh, axis: str = "data") -> int:
-    return mesh.shape[axis]
+def _data_axes(axis) -> tuple:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
 
 
-def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
-    """NamedSharding for host->device batch transfer (leading dim over data).
+def data_axis_size(mesh: Mesh, axis=None) -> int:
+    """Total data-parallel degree: the product of the data axes' sizes
+    (``axis=None`` = every pod/data axis of the mesh)."""
+    if axis is None:
+        from repro.launch.mesh import data_axes
+        axis = data_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in _data_axes(axis)]))
+
+
+def batch_sharding(mesh: Mesh, axis=None) -> NamedSharding:
+    """NamedSharding for host->device batch transfer (leading dim over the
+    data axes — jointly, pod-major, when ``axis`` is a tuple or ``None``).
 
     Matches the step's data layout so the prefetcher's ``device_put`` lands
     shards exactly where the engine consumes them — no resharding copy.
-    On a 2-D mesh the batch is replicated over the model axis.
+    The batch is replicated over any model axis.
     """
-    return NamedSharding(mesh, P(axis))
+    if axis is None:
+        from repro.launch.mesh import data_axes
+        axis = data_axes(mesh)
+    axes = _data_axes(axis)
+    return NamedSharding(mesh, P(axes[0] if len(axes) == 1 else axes))
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def _data_axes(axis) -> tuple:
-    return (axis,) if isinstance(axis, str) else tuple(axis)
+def replicate_to_mesh(tree, mesh: Mesh):
+    """Place a host-local pytree fully replicated on ``mesh`` — the
+    multi-process-safe ``device_put``.
+
+    On a single-process mesh this IS ``jax.device_put(x, P())``.  On a
+    multi-process mesh ``device_put`` cannot address other processes'
+    devices, so each leaf goes through
+    ``jax.make_array_from_process_local_data`` instead: every process
+    supplies its (identical — same seed, same init) host value and jax
+    assembles the global replicated array.  Use this for params/ISGD
+    state/sched state before handing them to the engines."""
+    sh = replicated(mesh)
+    procs = {d.process_index for d in mesh.devices.flat}
+    if len(procs) <= 1:
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def put(x):
+        x = np.asarray(x)
+        return jax.make_array_from_process_local_data(sh, x, x.shape)
+
+    return jax.tree.map(put, tree)
 
 
-def tensor_axes(mesh: Mesh, axis: str = "data") -> tuple:
+def tensor_axes(mesh: Mesh, axis=None) -> tuple:
     """Non-data mesh axes with size > 1 — the tensor/model-parallel part.
 
     Empty ⇒ the mesh is pure data parallel and the engine uses the manual
     shard_map strategy; non-empty ⇒ the GSPMD strategy (see module doc).
     """
+    if axis is None:
+        from repro.launch.mesh import data_axes
+        axis = data_axes(mesh)
     data = set(_data_axes(axis))
     return tuple(a for a in mesh.axis_names
                  if a not in data and mesh.shape[a] > 1)
 
 
-def _sharded_over_data(fn: Callable, mesh: Mesh, axis):
-    """``shard_map`` a 4-ary step/chunk body manually over the data axis:
-    args 0/1/3 (state, params, lr-or-j0) replicated, arg 2 (batch or ring)
-    sharded on its leading dim.  Only valid when ``tensor_axes`` is empty —
-    any trivial (size-1) non-data axis is bound manually too, which is a
-    no-op.
+class MeshStrategy:
+    """THE strategy dispatch point: everything the engines need to know
+    about *how* a mesh executes, resolved once.
 
-    check_rep=False: replication of the outputs follows from the pmean'd
-    grads/ψ, but the rep checker can't see through cond/while_loop bodies.
+    ``reduce_ctx`` — what ``make_step_core`` reduces ψ/grads with;
+    ``wrap_step``/``wrap_sched`` — how a traced body becomes a mesh
+    program; ``constrain_batch`` — the GSPMD-side equivalent of the manual
+    in_specs.  The manual/GSPMD split (see module doc: scan-in-manual-
+    subgroup is its only reason to exist) lives entirely in this class —
+    when shardy lands, collapse it here and no engine factory changes.
     """
-    return shard_map(fn, mesh=mesh,
-                     in_specs=(P(), P(), P(axis), P()),
-                     out_specs=(P(), P(), P()),
-                     check_rep=False)
+
+    def __init__(self, mesh: Mesh, axis=None):
+        if axis is None:
+            from repro.launch.mesh import data_axes
+            axes = data_axes(mesh)
+            assert axes, f"mesh {tuple(mesh.shape)} has no data axes"
+        else:
+            axes = _data_axes(axis)
+        self.mesh = mesh
+        #: normalized data axis spec (str when single — preserves the
+        #: historical P("data") spec objects and cache keys)
+        self.axis = axes[0] if len(axes) == 1 else axes
+        self.tensor_axes = tensor_axes(mesh, axes)
+        #: True ⇒ GSPMD strategy (global program); False ⇒ manual shard_map
+        self.gspmd = bool(self.tensor_axes)
+        #: reduction context for ``make_step_core`` — LOCAL under GSPMD
+        #: (the traced program spans the global batch); deterministic
+        #: AxisReduce under manual, so the f32 association is pinned to
+        #: the flat shard order and any process topology that preserves
+        #: the data order reproduces the same bits.
+        self.reduce_ctx = (LOCAL if self.gspmd
+                           else AxisReduce(self.axis, deterministic=True))
+
+    def wrap_step(self, fn: Callable) -> Callable:
+        """4-ary step/chunk body (state, params, batch_or_ring, lr_or_j) ->
+        mesh program.  Manual: shard_map with arg 2 sharded over the data
+        axes.  GSPMD: the body already IS the global program."""
+        if self.gspmd:
+            return fn
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(P(), P(), P(self.axis), P()),
+                         out_specs=(P(), P(), P()),
+                         check_rep=False)
+
+    def wrap_sched(self, fn: Callable) -> Callable:
+        """Scheduled twin of ``wrap_step`` for the 5-ary bodies from
+        ``repro.sched.engine``: (state, params, sched_state, ring, j) with
+        only the ring sharded.  The schedule state (loss table, visit
+        counters) is replicated — its updates are driven by the reduced ψ
+        and the step-index-derived key, so every shard writes the same
+        values (the same replication-by-construction argument as the
+        accelerate cond)."""
+        if self.gspmd:
+            return fn
+        return shard_map(fn, mesh=self.mesh,
+                         in_specs=(P(), P(), P(), P(self.axis), P()),
+                         out_specs=(P(), P(), P(), P()),
+                         check_rep=False)
+
+    def constrain_batch(self, batch):
+        """Pin every divisible batch leaf's leading dim to the data axes —
+        the GSPMD strategy's equivalent of the manual in_specs; identity on
+        the manual strategy (the shard_map specs already did it)."""
+        if not self.gspmd:
+            return batch
+        size = data_axis_size(self.mesh, self.axis)
+        sh = NamedSharding(self.mesh, P(self.axis))
+
+        def leaf(x):
+            if getattr(x, "ndim", 0) and x.shape[0] % size == 0:
+                return jax.lax.with_sharding_constraint(x, sh)
+            return x
+
+        return jax.tree.map(leaf, batch)
 
 
-def _sharded_over_data_sched(fn: Callable, mesh: Mesh, axis):
-    """Scheduled twin of ``_sharded_over_data`` for the 5-ary bodies from
-    ``repro.sched.engine``: (state, params, sched_state, ring, j) with only
-    the ring sharded.  The schedule state (loss table, visit counters) is
-    replicated — its updates are driven by the pmean'd ψ and the
-    step-index-derived key, so every shard writes the same values (the same
-    replication-by-construction argument as the accelerate cond)."""
-    return shard_map(fn, mesh=mesh,
-                     in_specs=(P(), P(), P(), P(axis), P()),
-                     out_specs=(P(), P(), P(), P()),
-                     check_rep=False)
-
-
-def _constrain_batch(mesh: Mesh, axis, batch):
-    """Pin every divisible batch leaf's leading dim to the data axis — the
-    GSPMD strategy's equivalent of the manual in_specs ``P(axis)``."""
-    size = 1
-    for a in _data_axes(axis):
-        size *= mesh.shape[a]
-    sh = NamedSharding(mesh, P(axis))
-
-    def leaf(x):
-        if getattr(x, "ndim", 0) and x.shape[0] % size == 0:
-            return jax.lax.with_sharding_constraint(x, sh)
-        return x
-
-    return jax.tree.map(leaf, batch)
+def mesh_strategy(mesh: Mesh, axis=None) -> MeshStrategy:
+    """Resolve the execution strategy for ``mesh`` (see
+    :class:`MeshStrategy`).  ``axis=None`` spans every data sub-axis the
+    mesh has (``("pod", "data")`` on a 3-D mesh)."""
+    return MeshStrategy(mesh, axis)
 
 
 def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
                      isgd_cfg: ISGDConfig, mesh: Mesh, *,
-                     axis: str = "data", inconsistent: bool = True,
+                     axis=None, inconsistent: bool = True,
                      lr_fn: Optional[Callable] = None,
                      micro_batches: int = 1, donate: bool = True,
                      schedule=None, sched_seed: int = 0):
@@ -156,14 +254,18 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
 
     ``step_fn(state, params, batch, lr=None) -> (state, params, metrics)``
     where ``batch`` leaves carry the *global* batch on their leading dim
-    (divisible by the ``data`` axis size).  Params/state are replicated
-    over ``data``; over any tensor-parallel axis their layout follows the
-    caller's placement (``launch/shardings.py``).  All outputs are
-    replicated over ``data``: grads are globally reduced before the base
+    (divisible by the total data-axis size).  Params/state are replicated
+    over the data axes; over any tensor-parallel axis their layout follows
+    the caller's placement (``launch/shardings.py``).  All outputs are
+    replicated over data: grads are globally reduced before the base
     update and ψ before the queue push, so every data shard computes the
     same new params.  When ``lr`` is not passed, ``lr_fn`` reads ψ̄ from
     the queue of the *incoming* state — the one-step lag of Alg.1 line 19,
     identical on both strategies because both run ``make_step_core``.
+
+    ``axis=None`` resolves to the mesh's data sub-axes — ``("pod", "data")``
+    on a process-aware 3-D mesh, ``"data"`` otherwise (the historical
+    default).
 
     ``schedule`` (a ``repro.sched`` policy; requires ``lr_fn``) switches to
     on-device batch selection with the scheduled contract — ``step_fn(state,
@@ -171,9 +273,9 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
     metrics)`` — where ``ring_arrays`` is a :class:`DeviceRing`'s
     ``.arrays`` (relaid-out on the manual strategy, ``relayout=False`` on
     GSPMD, exactly like the chunked engine).  Selection is replicated-
-    deterministic across data shards: the draw key is a pure function of
-    the replicated step index, and the loss-table update consumes the
-    ``AxisReduce``-reduced ψ.
+    deterministic across data shards *and processes*: the draw key is a
+    pure function of the replicated step index, and the loss-table update
+    consumes the ``AxisReduce``-reduced ψ.
     """
     if schedule is not None:
         return _make_scheduled_hybrid(
@@ -181,27 +283,19 @@ def make_hybrid_step(loss_fn: Callable, rule: UpdateRule,
             inconsistent=inconsistent, lr_fn=lr_fn,
             micro_batches=micro_batches, donate=donate, schedule=schedule,
             sched_seed=sched_seed, chunk_steps=None)
+    strat = mesh_strategy(mesh, axis)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
+    init_fn, core_step = make_step_core(
+        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
+        reduce_ctx=strat.reduce_ctx, micro_batches=micro_batches)
 
-    if tensor_axes(mesh, axis):
-        # GSPMD strategy: the global program, partitioned by placement +
-        # constraints.  LOCAL reduction — the traced loss/grads already
-        # span the global batch.
-        init_fn, core_step = make_step_core(
-            loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
-            reduce_ctx=LOCAL, micro_batches=micro_batches)
-
+    if strat.gspmd:
         def step_fn(state, params, batch, lr=None):
-            return core_step(state, params,
-                             _constrain_batch(mesh, axis, batch), lr)
+            return core_step(state, params, strat.constrain_batch(batch), lr)
 
         return init_fn, jax.jit(step_fn, **jit_kwargs)
 
-    # manual shard_map strategy: per-shard body + explicit AxisReduce
-    init_fn, core_step = make_step_core(
-        loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
-        reduce_ctx=AxisReduce(axis), micro_batches=micro_batches)
-    sharded = _sharded_over_data(core_step, mesh, axis)
+    sharded = strat.wrap_step(core_step)
 
     def step_fn(state, params, batch, lr=None):
         if lr is None:
@@ -222,20 +316,17 @@ def _make_scheduled_hybrid(loss_fn, rule, isgd_cfg, mesh, *, axis,
     from repro.sched.engine import chunk_over_schedule, make_scheduled_body
 
     assert lr_fn is not None, "scheduled engine needs lr_fn (device-side LR)"
-    gspmd = bool(tensor_axes(mesh, axis))
+    strat = mesh_strategy(mesh, axis)
     init_fn, step_fn = make_step_core(
         loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
-        reduce_ctx=LOCAL if gspmd else AxisReduce(axis),
-        micro_batches=micro_batches)
+        reduce_ctx=strat.reduce_ctx, micro_batches=micro_batches)
     if chunk_steps is None:
         body = make_scheduled_body(step_fn, schedule, isgd_cfg.n_batches,
                                    sched_seed)
     else:
         body = chunk_over_schedule(step_fn, schedule, isgd_cfg.n_batches,
                                    chunk_steps, sched_seed)
-    if not gspmd:
-        body = _sharded_over_data_sched(body, mesh, axis)
-    inner = body
+    inner = strat.wrap_sched(body)
 
     def fn(state, params, sched_state, ring_arrays, j):
         return inner(state, params, sched_state, ring_arrays,
@@ -247,7 +338,7 @@ def _make_scheduled_hybrid(loss_fn, rule, isgd_cfg, mesh, *, axis,
 
 def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
                              isgd_cfg: ISGDConfig, mesh: Mesh, *,
-                             chunk_steps: int, axis: str = "data",
+                             chunk_steps: int, axis=None,
                              inconsistent: bool = True,
                              lr_fn: Optional[Callable] = None,
                              micro_batches: int = 1, donate: bool = True,
@@ -261,8 +352,8 @@ def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
 
       * manual shard_map — the scan runs per device; each data shard slices
         its own rows out of its local block of a *relaid-out* sharded
-        :class:`DeviceRing` (``ring_arrays`` sharded ``P(axis)``, layout
-        documented in ``repro.data.device_ring``);
+        :class:`DeviceRing` (``ring_arrays`` sharded over the data axes,
+        layout documented in ``repro.data.device_ring``);
       * GSPMD — the scan is one global program; ``ring_arrays`` keep the
         *global* row order (``DeviceRing(relayout=False)``) and the in-scan
         ``dynamic_slice`` picks the global batch, which the partitioner
@@ -284,28 +375,16 @@ def make_chunked_hybrid_step(loss_fn: Callable, rule: UpdateRule,
             inconsistent=inconsistent, lr_fn=lr_fn,
             micro_batches=micro_batches, donate=donate, schedule=schedule,
             sched_seed=sched_seed, chunk_steps=chunk_steps)
+    strat = mesh_strategy(mesh, axis)
     jit_kwargs = dict(donate_argnums=(0, 1)) if donate else {}
-
-    if tensor_axes(mesh, axis):
-        init_fn, step_fn = make_step_core(
-            loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
-            reduce_ctx=LOCAL, micro_batches=micro_batches)
-        chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
-
-        def chunk_fn(state, params, ring_arrays, j0):
-            return chunk(state, params, ring_arrays,
-                         jnp.asarray(j0, jnp.int32))
-
-        return init_fn, jax.jit(chunk_fn, **jit_kwargs)
-
     init_fn, step_fn = make_step_core(
         loss_fn, rule, isgd_cfg, inconsistent=inconsistent, lr_fn=lr_fn,
-        reduce_ctx=AxisReduce(axis), micro_batches=micro_batches)
-    device_chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
-    sharded = _sharded_over_data(device_chunk, mesh, axis)
+        reduce_ctx=strat.reduce_ctx, micro_batches=micro_batches)
+    chunk = chunk_over_ring(step_fn, isgd_cfg.n_batches, chunk_steps)
+    wrapped = strat.wrap_step(chunk)
 
     def chunk_fn(state, params, ring_arrays, j0):
-        return sharded(state, params, ring_arrays,
+        return wrapped(state, params, ring_arrays,
                        jnp.asarray(j0, jnp.int32))
 
     return init_fn, jax.jit(chunk_fn, **jit_kwargs)

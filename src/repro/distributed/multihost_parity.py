@@ -1,0 +1,382 @@
+"""Multi-process parity harness: N cooperating jax processes vs one.
+
+The acceptance check of the multi-host scale-out (ROADMAP: multi-host 3-D
+mesh): a **2-process run on a (pod=2, data=2, model=1) mesh must be
+bit-exact with the 1-process (data=4, model=1) run** — same final params,
+same per-step loss/ψ̄/limit series, same ψ control queue, same
+accelerate/subproblem counters — for the per-step engine, the fused
+chunked engine (K=32), and the sched-fcpr scheduler path, all driving a
+ψ̄-dependent ``lr_fn`` on the measured path (the one-step-lagged ψ̄ of
+Alg.1 line 19).
+
+Why bit-exactness is achievable at all: the manual-strategy engines reduce
+ψ/grads with ``AxisReduce(axes, deterministic=True)`` — all_gather to flat
+pod-major shard order, then a local mean — so the f32 association is a
+pure function of the shard *values*, not of which backend ring carried
+them (``core/reduce.py``).  The FCPR data layer holds the other half: each
+process's :class:`~repro.data.device_ring.DeviceRing` uploads only its
+stripe of the globally permuted epoch, and this harness proves the stripes
+are the *same rows* the single-process ring holds (union of per-process
+stripes == single-host relaid-out epoch, bit-for-bit), plus the SPC queue
+after exactly one epoch is identical — "one ψ window = one epoch" survives
+scale-out.
+
+Topology (same-machine, real cross-process collectives via gloo):
+
+    parent (jax-free orchestrator)
+      ├─ ref child:    XLA_FLAGS=..device_count=4, no coordinator
+      ├─ worker 0:     XLA_FLAGS=..device_count=2, --process-id 0 ─┐ gloo
+      └─ worker 1:     XLA_FLAGS=..device_count=2, --process-id 1 ─┘
+
+Every worker writes its results npz (outputs are replicated, so worker 1's
+file double-checks replication itself); the parent compares everything
+bit-exactly.  Run it:
+
+    PYTHONPATH=src python -m repro.distributed.multihost_parity \
+        --procs 2 --devices-per-proc 2 --steps 32 --chunk-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+
+LEGS = ("perstep", "chunked", "sched")
+
+# problem constants — mirror repro.distributed.hybrid_parity's canonical
+# dim=6 linear problem (see the comment there for why dim stays small)
+DIM = 6
+N_BATCHES = 4
+PER_DEVICE_BATCH = 8
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+# ---------------------------------------------------------------------------
+# child: one jax process (reference or worker)
+# ---------------------------------------------------------------------------
+def _child(args) -> int:
+    from repro.launch import env as ENV
+    if args.coordinator:
+        ENV.initialize_distributed(args.coordinator, args.num_processes,
+                                   args.process_id)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import ISGDConfig
+    from repro.data import DeviceRing, FCPRSampler
+    from repro.distributed.data_parallel import (make_chunked_hybrid_step,
+                                                 make_hybrid_step,
+                                                 replicate_to_mesh)
+    from repro.launch.mesh import local_data_block, make_training_mesh
+    from repro.optim import momentum
+    from repro.sched import FCPRSchedule
+
+    steps, K = args.steps, args.chunk_steps
+    mesh = make_training_mesh()      # (4,1) ref / (pod,2,1) workers
+    n_data = int(np.prod([mesh.shape[a] for a in mesh.shape
+                          if a != "model"]))
+    batch_size = PER_DEVICE_BATCH * n_data
+    assert steps % K == 0 and steps >= 2 * N_BATCHES
+
+    rng = np.random.RandomState(0)
+    xs = rng.randn(batch_size * N_BATCHES, DIM).astype(np.float32)
+    ys = ((xs @ rng.randn(DIM, 1).astype(np.float32)).ravel()
+          / np.sqrt(DIM)).astype(np.float32)
+    ys[:batch_size] += 3.0                      # the under-trained batch
+    sampler = FCPRSampler({"x": xs, "y": ys}, batch_size=batch_size, seed=1)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, loss
+
+    params0 = {"w": jnp.zeros((DIM,), jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    rule = momentum(0.9)
+    icfg = ISGDConfig(n_batches=N_BATCHES, k_sigma=1.0, stop=3, zeta=0.01)
+
+    def lr_fn(psi_bar):
+        # ψ̄-dependent on purpose: a frozen/diverged ψ̄ shifts the params
+        return jnp.asarray(0.01) + 0.001 * jnp.minimum(psi_bar, 1.0)
+
+    ring = DeviceRing(sampler.epoch_arrays(), batch_size, mesh=mesh,
+                      axis=None, relayout=True)
+    out = {"n_dev": np.int64(n_data),
+           "proc": np.int64(jax.process_index()),
+           "nprocs": np.int64(jax.process_count())}
+
+    # -- FCPR striping evidence: this process's actual device-resident
+    # rows, tagged with their global row offsets ---------------------------
+    lo, hi, total = local_data_block(mesh)
+    out["block"] = np.asarray([lo, hi, total], np.int64)
+    xa = ring.arrays["x"]
+    rows_per_shard = xa.shape[0] // total
+    shards = sorted(xa.addressable_shards,
+                    key=lambda s: s.index[0].start or 0)
+    out["stripe_starts"] = np.asarray(
+        [s.index[0].start or 0 for s in shards], np.int64)
+    out["stripe_data"] = np.concatenate(
+        [np.asarray(s.data) for s in shards], axis=0)
+    assert out["stripe_data"].shape[0] == (hi - lo) * rows_per_shard
+    out["epoch_x"] = sampler.epoch_arrays()["x"]   # permuted global epoch
+
+    def fetch(tree):
+        return jax.tree.map(np.asarray, tree)      # replicated -> host
+
+    def record(leg, s, p, stacked, queue_epoch1=None):
+        out[f"{leg}_w"] = np.asarray(p["w"])
+        out[f"{leg}_b"] = np.asarray(p["b"])
+        for k in ("loss", "limit", "psi_bar", "accelerated", "sub_iters"):
+            out[f"{leg}_{k}"] = stacked[k]
+        out[f"{leg}_queue_buf"] = np.asarray(s.queue.buf)
+        out[f"{leg}_queue_total"] = np.asarray(s.queue.total)
+        out[f"{leg}_queue_count"] = np.asarray(s.queue.count)
+        out[f"{leg}_accel_count"] = np.asarray(s.accel_count)
+        out[f"{leg}_sub_iters_total"] = np.asarray(s.sub_iters)
+        if queue_epoch1 is not None:
+            out[f"{leg}_queue_epoch1"] = queue_epoch1
+
+    def fresh():
+        p = replicate_to_mesh(jax.tree.map(np.asarray, params0), mesh)
+        return p
+
+    # ---- per-step engine, ψ̄-lagged lr computed on the measured path ----
+    init_fn, step_fn = make_hybrid_step(loss_fn, rule, icfg, mesh,
+                                        axis=None, lr_fn=lr_fn,
+                                        donate=False)
+    p = fresh()
+    s = replicate_to_mesh(fetch(init_fn(params0)), mesh)
+    ms, queue_epoch1 = [], None
+    for j in range(steps):
+        # lr is NOT passed: the engine reads ψ̄ from the incoming state's
+        # queue inside the jitted step — the one-step lag of Alg.1 line 19
+        # on the measured path, identical program on both topologies
+        s, p, m = step_fn(s, p, ring(j))
+        ms.append(fetch(m))
+        if j + 1 == N_BATCHES:                 # "one ψ window = one epoch"
+            queue_epoch1 = np.concatenate([
+                np.asarray(s.queue.buf).ravel(),
+                np.asarray(s.queue.total).ravel().astype(np.float32),
+                np.asarray(s.queue.count).ravel().astype(np.float32)])
+    stacked = {k: np.stack([m[k] for m in ms]) for k in ms[0]}
+    record("perstep", s, p, stacked, queue_epoch1)
+
+    # ---- chunked engine, one fused dispatch per K steps ------------------
+    cinit, chunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh,
+                                            chunk_steps=K, axis=None,
+                                            lr_fn=lr_fn, donate=False)
+    p = fresh()
+    s = replicate_to_mesh(fetch(cinit(params0)), mesh)
+    outs = []
+    for c in range(steps // K):
+        s, p, msk = chunk(s, p, ring.arrays, c * K)
+        outs.append(fetch(msk))
+    stacked = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    record("chunked", s, p, stacked)
+
+    # ---- scheduler path: FCPR policy drawn on device inside the scan ----
+    fcpr = FCPRSchedule()
+    sinit, schunk = make_chunked_hybrid_step(loss_fn, rule, icfg, mesh,
+                                             chunk_steps=K, axis=None,
+                                             lr_fn=lr_fn, donate=False,
+                                             schedule=fcpr)
+    p = fresh()
+    s = replicate_to_mesh(fetch(sinit(params0)), mesh)
+    ss = replicate_to_mesh(fetch(fcpr.init(N_BATCHES)), mesh)
+    outs = []
+    for c in range(steps // K):
+        s, p, ss, msk = schunk(s, p, ss, ring.arrays, c * K)
+        outs.append(fetch(msk))
+    stacked = {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+    record("sched", s, p, stacked)
+
+    np.savez(args.out, **out)
+    print(f"child proc={int(out['proc'])}/{int(out['nprocs'])} "
+          f"mesh={dict(mesh.shape)} wrote {args.out}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# parent: orchestrate + compare
+# ---------------------------------------------------------------------------
+def _spawn(extra_args, devices, out, workdir, timeout):
+    from repro.launch import env as ENV
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    ENV.force_host_device_count(devices, env=env)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    cmd = [sys.executable, "-m", "repro.distributed.multihost_parity",
+           "--child", "--out", out] + extra_args
+    return subprocess.Popen(cmd, env=env, cwd=workdir,
+                            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+                            text=True)
+
+
+def run_multihost_parity(procs: int = 2, devices_per_proc: int = 2,
+                         steps: int = 32, chunk_steps: int = 32,
+                         workdir: str = ".", timeout: float = 420.0,
+                         verbose: bool = False) -> dict:
+    """Spawn the reference and the N-process group, compare bit-exactly.
+    Returns {"ok": bool, "legs": {...}, "striping": {...}, ...}."""
+    import numpy as np
+    import tempfile
+
+    total = procs * devices_per_proc
+    tmp = tempfile.mkdtemp(prefix="mhp_")
+    ref_out = os.path.join(tmp, "ref.npz")
+    w_out = [os.path.join(tmp, f"w{i}.npz") for i in range(procs)]
+    sargs = ["--steps", str(steps), "--chunk-steps", str(chunk_steps)]
+
+    ref = _spawn(sargs, total, ref_out, workdir, timeout)
+    port = _free_port()
+    workers = [
+        _spawn(sargs + ["--coordinator", f"127.0.0.1:{port}",
+                        "--num-processes", str(procs),
+                        "--process-id", str(i)],
+               devices_per_proc, w_out[i], workdir, timeout)
+        for i in range(procs)]
+
+    logs = {}
+    failed = []
+    for name, proc in [("ref", ref)] + [(f"w{i}", w)
+                                        for i, w in enumerate(workers)]:
+        try:
+            out, _ = proc.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            out = proc.communicate()[0] + "\n<TIMEOUT>"
+        logs[name] = out
+        if proc.returncode != 0:
+            failed.append(name)
+    if failed:
+        for name in failed:
+            print(f"--- {name} (rc != 0) ---\n{logs[name]}")
+        return {"ok": False, "failed_children": failed, "legs": {}}
+
+    R = dict(np.load(ref_out, allow_pickle=False))
+    W = [dict(np.load(p, allow_pickle=False)) for p in w_out]
+
+    legs = {}
+    keys = ["w", "b", "loss", "limit", "psi_bar", "accelerated",
+            "sub_iters", "queue_buf", "queue_total", "queue_count",
+            "accel_count", "sub_iters_total"]
+    for leg in LEGS:
+        bad = []
+        for key in keys + (["queue_epoch1"] if leg == "perstep" else []):
+            k = f"{leg}_{key}"
+            if not np.array_equal(R[k], W[0][k]):
+                bad.append(f"{key}: ref!=workers "
+                           f"(maxdiff {np.max(np.abs(R[k] - W[0][k]))})")
+            if not np.array_equal(W[0][k], W[-1][k]):
+                bad.append(f"{key}: worker replicas differ")
+        legs[leg] = {"ok": not bad, "bad": bad,
+                     "accelerations": int(R[f"{leg}_accel_count"])}
+
+    # ---- FCPR striping: union of per-process stripes == the single-host
+    # relaid-out permuted epoch, and the SPC window covers exactly it -----
+    n_rows = R["epoch_x"].shape[0]
+    assembled = np.full_like(R["epoch_x"], np.nan)
+    for w in W:
+        row = 0
+        for start in w["stripe_starts"]:
+            shard_rows = w["stripe_data"].shape[0] // len(w["stripe_starts"])
+            assembled[start:start + shard_rows] = \
+                w["stripe_data"][row:row + shard_rows]
+            row += shard_rows
+    # expected: the reference ring's own device rows, assembled identically
+    ref_assembled = np.full_like(R["epoch_x"], np.nan)
+    row = 0
+    for start in R["stripe_starts"]:
+        shard_rows = R["stripe_data"].shape[0] // len(R["stripe_starts"])
+        ref_assembled[start:start + shard_rows] = \
+            R["stripe_data"][row:row + shard_rows]
+        row += shard_rows
+    # and the analytic relayout of the permuted epoch (independent of any
+    # DeviceRing code): batch-major -> shard-major regrouping
+    bs = n_rows // N_BATCHES
+    bsl = bs // int(R["n_dev"])
+    expect = (R["epoch_x"].reshape(N_BATCHES, int(R["n_dev"]), bsl, DIM)
+              .swapaxes(0, 1).reshape(n_rows, DIM))
+    striping = {
+        "union_covers_epoch": bool(np.isfinite(assembled).all()),
+        "union_equals_singlehost": bool(np.array_equal(assembled,
+                                                       ref_assembled)),
+        "matches_analytic_relayout": bool(np.array_equal(assembled, expect)),
+        "epoch_equal_across_processes": bool(
+            np.array_equal(W[0]["epoch_x"], R["epoch_x"])
+            and np.array_equal(W[-1]["epoch_x"], R["epoch_x"])),
+    }
+    striping["ok"] = all(striping.values())
+
+    ok = all(leg["ok"] for leg in legs.values()) and striping["ok"]
+    accel = legs["perstep"]["accelerations"]
+    result = {"ok": ok, "procs": procs,
+              "devices_per_proc": devices_per_proc, "steps": steps,
+              "K": chunk_steps, "accelerations": accel, "legs": legs,
+              "striping": striping}
+    if verbose or not ok:
+        for leg, r in legs.items():
+            print(f"  {leg:8s} ok={r['ok']} "
+                  f"accel={r['accelerations']} {r['bad'] or ''}")
+        print(f"  striping {striping}")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true",
+                    help="internal: run as one jax process of the harness")
+    ap.add_argument("--out", default=None, help="child: npz output path")
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--procs", type=int, default=2)
+    ap.add_argument("--devices-per-proc", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--chunk-steps", type=int, default=32)
+    ap.add_argument("--timeout", type=float, default=420.0)
+    ap.add_argument("--json-out", default=None,
+                    help="parent: write the result dict as JSON here")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    if args.child:
+        return _child(args)
+    r = run_multihost_parity(procs=args.procs,
+                             devices_per_proc=args.devices_per_proc,
+                             steps=args.steps, chunk_steps=args.chunk_steps,
+                             timeout=args.timeout, verbose=args.verbose)
+    if args.json_out:
+        def clean(x):
+            if isinstance(x, dict):
+                return {k: clean(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [clean(v) for v in x]
+            return x if isinstance(x, (bool, int, float, str,
+                                       type(None))) else str(x)
+        with open(args.json_out, "w") as f:
+            json.dump(clean(r), f, indent=2)
+    print(f"multihost-parity procs={r.get('procs')}x"
+          f"{r.get('devices_per_proc')}dev steps={r.get('steps')} "
+          f"K={r.get('K')} accelerations={r.get('accelerations')} -> "
+          f"{'OK' if r['ok'] else 'FAIL'}")
+    if r["ok"] and not r.get("accelerations"):
+        print("multihost-parity WARNING: subproblem never fired")
+        return 2
+    return 0 if r["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

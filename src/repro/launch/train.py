@@ -72,6 +72,20 @@ unavailable (see ``repro.kernels.policy``); ``--precision bf16|f32`` is the
 compute dtype (ψ statistics and the SPC queue stay f32 either way);
 ``--remat full|tp_out|none`` sets the chunk-scan-boundary checkpoint policy.
 
+Multi-process (ROADMAP: multi-host 3-D mesh scale-out): every runner
+accepts the shared ``--coordinator/--num-processes/--process-id`` surface
+(``repro.launch.env``).  When present, ``jax.distributed.initialize`` is
+wired up before any device use, the mesh factory produces a
+``(pod, data, model)`` mesh over the *global* device set (one pod row per
+process), ψ/grads reduce over ``("pod", "data")`` deterministically, the
+FCPR epoch is striped per process through the :class:`DeviceRing` (each
+process uploads only its rows), and checkpoints follow process-0-writes /
+all-validate (``repro.train.checkpoints``).  A 2-process ``(2, 2, 1)`` run
+is bit-exact with the single-process ``(4, 1)`` run
+(``repro.distributed.multihost_parity``).  Library validation errors
+(:class:`repro.launch.mesh.MeshError`) are translated to ``SystemExit``
+here, at the CLI boundary — library code never exits.
+
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 30 --batch 8 --seq 128
   PYTHONPATH=src python -m repro.launch.train --model transformer \
@@ -80,6 +94,11 @@ compute dtype (ψ statistics and the SPC queue stay f32 either way);
       python -m repro.launch.train --arch internlm2-1.8b --reduced \
       --engine hybrid --model-parallel 2 --chunk-steps 8 --steps 32 \
       --batch 16
+  # two cooperating processes on one machine (2 CPU devices each):
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+      python -m repro.launch.train --model transformer --steps 16 \
+      --batch 8 --coordinator 127.0.0.1:9911 --num-processes 2 \
+      --process-id 0   # and the same command with --process-id 1
 """
 from __future__ import annotations
 
@@ -99,8 +118,11 @@ from repro.data import DeviceRing, FCPRSampler, make_lm_tokens, ring_or_prefetch
 from repro.distributed import (PrefetchSampler, batch_sharding,
                                make_chunked_hybrid_step, make_hybrid_step,
                                tensor_axes)
+from repro.distributed.data_parallel import replicate_to_mesh
+from repro.launch import env as ENV
 from repro.launch import shardings as SH
-from repro.launch.mesh import make_data_mesh, make_host_mesh
+from repro.launch.mesh import (MeshError, is_multiprocess, make_data_mesh,
+                               make_training_mesh)
 from repro.models import build_model
 from repro.optim import RULES
 from repro.sharding import activation_sharding, rules
@@ -140,7 +162,7 @@ def _drive_chunks(jchunk, state, params, ring, steps: int, k: int, *,
     while j < steps:
         state, params, ms = jchunk(state, params, ring.arrays, j)
         j += k
-        print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
+        ENV.p0print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
               f"limit={float(ms['limit'][-1]):.4f} "
               f"accel={bool(ms['accelerated'][-1])}")
@@ -159,7 +181,7 @@ def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
             state, params, sched_state, m = jfn(state, params, sched_state,
                                                 ring.arrays, j)
             if (j + 1) % 5 == 0 or j == 0:
-                print(f"step {j+1:4d} batch={int(m['batch_idx'])} "
+                ENV.p0print(f"step {j+1:4d} batch={int(m['batch_idx'])} "
                       f"loss={float(m['loss']):.4f} "
                       f"psi_bar={float(m['psi_bar']):.4f} "
                       f"limit={float(m['limit']):.4f} "
@@ -175,7 +197,7 @@ def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
         j += k
         visits = np.bincount(np.asarray(ms["batch_idx"]),
                              minlength=ring.n_batches)
-        print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
+        ENV.p0print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
               f"limit={float(ms['limit'][-1]):.4f} "
               f"accel={bool(ms['accelerated'][-1])} "
@@ -250,13 +272,13 @@ def _maybe_resume(args, ckpt, *, params_like, state_like, sched_like=None):
     from repro.train.checkpoints import restore_engine
     latest = ckpt.latest()
     if latest is None:
-        print(f"resume: no checkpoint under {ckpt.directory!r}; "
-              f"starting fresh")
+        ENV.p0print(f"resume: no checkpoint under {ckpt.directory!r}; "
+                    f"starting fresh")
         return None
     ck = restore_engine(latest, params_like=params_like,
                         state_like=state_like, sched_like=sched_like)
     ckpt.mark(ck.step)
-    print(f"resume: restored {latest!r} at step {ck.step}")
+    ENV.p0print(f"resume: restored {latest!r} at step {ck.step}")
     return ck
 
 
@@ -272,38 +294,57 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                              "hybrid, not --engine data-parallel")
         mesh = make_data_mesh()
     else:
-        mesh = make_host_mesh(model=args.model_parallel)
-    n_data = mesh.shape["data"]
+        # pod defaults to the process count: 2-D (data, model) single-
+        # process, 3-D (pod, data, model) over global devices otherwise
+        mesh = make_training_mesh(model=args.model_parallel)
+    multiproc = is_multiprocess(mesh)
+    from repro.distributed.data_parallel import data_axis_size
+    n_data = data_axis_size(mesh)
     if args.batch % n_data:
         raise SystemExit(f"--batch {args.batch} must be a multiple of the "
-                         f"{n_data} 'data'-axis devices (it is split across "
+                         f"{n_data} data-axis devices (it is split across "
                          f"them)")
-    print(f"arch={cfg.name} engine={engine} mesh={dict(mesh.shape)} "
-          f"per_device_batch={args.batch // n_data} "
-          f"chunk_steps={args.chunk_steps}")
+    ENV.p0print(f"arch={cfg.name} engine={engine} mesh={dict(mesh.shape)} "
+                f"processes={ENV.topology().num_processes} "
+                f"per_device_batch={args.batch // n_data} "
+                f"chunk_steps={args.chunk_steps}")
 
     params = model.init(jax.random.PRNGKey(0), max_seq=args.seq)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     tp = bool(tensor_axes(mesh))
-    params, p_sh = SH.hybrid_params_placement(mesh, params)
+    if multiproc and tp:
+        raise SystemExit("--model-parallel > 1 is not wired for "
+                         "multi-process runs yet (tensor-sharded param "
+                         "placement needs per-process shard assembly); run "
+                         "model parallelism single-process or data "
+                         "parallelism multi-process")
+    if multiproc:
+        # every process initialized identical params (same PRNGKey):
+        # assemble them into one replicated global array per leaf
+        params = replicate_to_mesh(params, mesh)
+        from repro.distributed.data_parallel import replicated
+        p_sh = jax.tree.map(lambda _: replicated(mesh), params)
+    else:
+        params, p_sh = SH.hybrid_params_placement(mesh, params)
     if tp:
         # GSPMD strategy: tensor/FSDP-parallel weights + the activation
         # constraint table (valid here — the step is one global program)
         table = rules.activation_rule_table(mesh, args.batch)
         ctx = activation_sharding(rules.make_constrain(mesh, table))
-        print(f"params: {n_params/1e6:.1f}M (model/FSDP-sharded)")
+        ENV.p0print(f"params: {n_params/1e6:.1f}M (model/FSDP-sharded)")
     else:
         # manual shard_map strategy: params replicated; constraints would
         # be illegal inside the manual region and are not needed
         ctx = contextlib.nullcontext()
-        print(f"params: {n_params/1e6:.1f}M (replicated)")
+        ENV.p0print(f"params: {n_params/1e6:.1f}M (replicated)")
 
     schedule = None
     if args.schedule is not None:
         from repro.sched import schedule_from_spec
         schedule = schedule_from_spec(args.schedule)
-        print(f"schedule: {schedule} (device-resident selection; non-FCPR "
-              f"policies read SPC limits from the per-batch loss table)")
+        ENV.p0print(f"schedule: {schedule} (device-resident selection; "
+                    f"non-FCPR policies read SPC limits from the per-batch "
+                    f"loss table)")
     if args.chunk_steps > 1:
         init_fn, jstep = make_chunked_hybrid_step(
             model.loss_fn, rule, icfg, mesh, chunk_steps=args.chunk_steps,
@@ -319,18 +360,21 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
     ckpt = _make_checkpointer(args)
     start = 0
 
+    put_repl = ((lambda t, _sh: replicate_to_mesh(t, mesh)) if multiproc
+                else jax.device_put)
     with mesh, ctx:
-        state = jax.device_put(state, s_sh)
+        state = put_repl(state, s_sh)
         if schedule is not None:
             # scheduled engines select on device: the ring is mandatory
             ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
-                              args.batch, mesh=mesh, relayout=not tp)
+                              args.batch, mesh=mesh, axis=None,
+                              relayout=not tp)
             sched_state = schedule.init(icfg.n_batches)
             ck = _maybe_resume(args, ckpt, params_like=params,
                                state_like=state, sched_like=sched_state)
             if ck is not None:
-                params = jax.device_put(ck.params, p_sh)
-                state = jax.device_put(ck.state, s_sh)
+                params = put_repl(ck.params, p_sh)
+                state = put_repl(ck.state, s_sh)
                 sched_state, start = ck.sched_state, ck.step
             t0 = time.perf_counter()
             state, steps = _drive_scheduled(jstep, state, params,
@@ -340,38 +384,50 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
             return state, time.perf_counter() - t0, steps - start
         ck = _maybe_resume(args, ckpt, params_like=params, state_like=state)
         if ck is not None:
-            params = jax.device_put(ck.params, p_sh)
-            state = jax.device_put(ck.state, s_sh)
+            params = put_repl(ck.params, p_sh)
+            state = put_repl(ck.state, s_sh)
             start = ck.step
         if args.chunk_steps > 1:
             # fused engine: sharded device ring + K steps per dispatch
             # (manual strategy slices its relaid-out local block; GSPMD
             # strategy slices the global row order)
             ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
-                              args.batch, mesh=mesh, relayout=not tp)
+                              args.batch, mesh=mesh, axis=None,
+                              relayout=not tp)
             t0 = time.perf_counter()
             state, steps = _drive_chunks(jstep, state, params, ring,
                                          args.steps, args.chunk_steps,
                                          start=start, ckpt=ckpt)
             return state, time.perf_counter() - t0, steps - start
 
-        b_sh = batch_sharding(mesh)
-        extra = {k: jax.device_put(v, b_sh)
-                 for k, v in frontend_embeds(cfg, args.batch).items()}
-        if args.device_ring:
-            feed = ring_or_prefetch(sampler, mesh=mesh,  # ring if it fits
-                                    relayout=not tp)
-            print(f"input: {type(feed).__name__}")
+        if multiproc:
+            # the host prefetcher's device_put cannot address other
+            # processes' devices: the striped device ring is the only
+            # multi-process feed (each process uploads its epoch stripe;
+            # frontend extras are tiled into the ring)
+            feed = DeviceRing(ring_epoch(cfg, sampler, args.batch),
+                              args.batch, mesh=mesh, axis=None,
+                              relayout=not tp)
+            extra = {}
+            ENV.p0print("input: DeviceRing (per-process epoch striping)")
         else:
-            feed = PrefetchSampler(
-                sampler,
-                sharding=SH.data_parallel_shardings(mesh, sampler(0)))
+            b_sh = batch_sharding(mesh)
+            extra = {k: jax.device_put(v, b_sh)
+                     for k, v in frontend_embeds(cfg, args.batch).items()}
+            if args.device_ring:
+                feed = ring_or_prefetch(sampler, mesh=mesh, axis=None,
+                                        relayout=not tp)  # ring if it fits
+                print(f"input: {type(feed).__name__}")
+            else:
+                feed = PrefetchSampler(
+                    sampler,
+                    sharding=SH.data_parallel_shardings(mesh, sampler(0)))
         t0 = time.perf_counter()
         for j in range(start, args.steps):
             batch = dict(feed(j), **extra)
             state, params, m = jstep(state, params, batch)
             if (j + 1) % 5 == 0 or j == 0:
-                print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                ENV.p0print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
                       f"psi_bar={float(m['psi_bar']):.4f} "
                       f"limit={float(m['limit']):.4f} "
                       f"accel={bool(m['accelerated'])}")
@@ -574,7 +630,19 @@ def main():
                     help="async-ps: workers checksum their deltas and the "
                          "server rejects corrupt arrivals (rejected/"
                          "transient pushes retry with backoff)")
+    ENV.add_process_args(ap)
     args = ap.parse_args()
+
+    # before any device use: latency-hiding flags + the process group
+    ENV.apply_async_collective_flags()
+    try:
+        topo = ENV.initialize_from_args(args)
+    except (ValueError, RuntimeError) as e:
+        raise SystemExit(str(e))
+    if topo.num_processes > 1 and (args.engine or "hybrid") == "async-ps":
+        raise SystemExit("--engine async-ps is host-thread-parallel; it "
+                         "does not compose with --coordinator "
+                         "multi-process runs")
 
     if (args.arch is None) == (args.model is None):
         raise SystemExit("pass exactly one of --arch or --model")
@@ -588,7 +656,7 @@ def main():
         if args.reduced:
             cfg = cfg.reduced()
     from repro.kernels.policy import kernels_note, resolve_kernels
-    print(kernels_note(args.kernels, resolve_kernels(args.kernels)))
+    ENV.p0print(kernels_note(args.kernels, resolve_kernels(args.kernels)))
     model = build_model(
         cfg, kernels=args.kernels,
         param_dtype=jnp.float32 if args.precision == "f32" else jnp.bfloat16,
@@ -607,16 +675,20 @@ def main():
                              else "hybrid")
     if engine == "pjit":
         engine = "hybrid"                 # historical alias, same engine
-    if engine == "async-ps":
-        state, dt, steps = run_async_ps(args, cfg, model, sampler, rule,
-                                        icfg, lr_fn)
-    else:
-        state, dt, steps = run_sync(args, cfg, model, sampler, rule, icfg,
-                                    lr_fn, engine=engine)
-    print(f"done: {steps} steps in {dt:.1f}s "
-          f"({dt/steps*1e3:.0f} ms/step) "
-          f"accelerated={int(state.accel_count)} "
-          f"sub_iters={int(state.sub_iters)}")
+    try:
+        if engine == "async-ps":
+            state, dt, steps = run_async_ps(args, cfg, model, sampler, rule,
+                                            icfg, lr_fn)
+        else:
+            state, dt, steps = run_sync(args, cfg, model, sampler, rule,
+                                        icfg, lr_fn, engine=engine)
+    except MeshError as e:
+        # the CLI boundary: library validation errors become exit codes
+        raise SystemExit(str(e))
+    ENV.p0print(f"done: {steps} steps in {dt:.1f}s "
+                f"({dt/steps*1e3:.0f} ms/step) "
+                f"accelerated={int(state.accel_count)} "
+                f"sub_iters={int(state.sub_iters)}")
 
 
 if __name__ == "__main__":

@@ -276,16 +276,53 @@ class Checkpointer:
     publish-directory protocol a serving ``SnapshotWatcher`` polls
     (``repro.serve.snapshot``): pruning keeps the ``keep`` newest files, so
     the pointed-to checkpoint always survives.
+
+    **Multi-process runs: process-0-writes / all-validate.**  Params and
+    ISGD state are replicated across processes (``repro.distributed``), so
+    N processes writing N identical files — or worse, racing the atomic
+    rename on a shared filesystem — would be pure waste.  ``role`` picks
+    the behaviour: ``"write"`` (the default on process 0 and on any
+    single-process run) does everything above; ``"validate"`` (the default
+    elsewhere) never touches the directory but, at every save point,
+    checksums *its own replica* of the engine state, barriers on the
+    writer (``multihost_utils.sync_global_devices``), and verifies the
+    written file's content checksum matches — a replica that silently
+    diverged fails loudly at the next checkpoint instead of poisoning a
+    later ``--resume``.  The save cadence predicate is a pure function of
+    (step, every, last-save), so every process reaches the barrier at the
+    same save points.  Validation assumes the writer's directory is
+    visible (same machine or shared FS); ``--resume`` restores on every
+    process from the same file, re-verifying the checksum per process.
     """
 
     def __init__(self, directory: str, every: int = 0, keep: int = 3,
-                 pointer: bool = False):
+                 pointer: bool = False, role: Optional[str] = None):
+        if role is None:
+            try:
+                role = "write" if jax.process_index() == 0 else "validate"
+            except Exception:        # backend not initialized: single proc
+                role = "write"
+        assert role in ("write", "validate"), role
         self.directory = directory
         self.every = every
         self.keep = keep
         self.pointer = pointer
+        self.role = role
         self._last = 0
-        os.makedirs(directory, exist_ok=True)
+        if role == "write":
+            os.makedirs(directory, exist_ok=True)
+
+    @staticmethod
+    def _nprocs() -> int:
+        try:
+            return jax.process_count()
+        except Exception:
+            return 1
+
+    def _barrier(self, step: int) -> None:
+        if self._nprocs() > 1:
+            from jax.experimental import multihost_utils
+            multihost_utils.sync_global_devices(f"ckpt_{step}")
 
     def path(self, step: int) -> str:
         return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
@@ -296,13 +333,28 @@ class Checkpointer:
         self._last = int(step)
 
     def save(self, step: int, **engine_kwargs) -> str:
-        out = save_engine(self.path(step), step=step, **engine_kwargs)
+        tree, extra = pack_engine_state(step=step, **engine_kwargs)
+        out = self.path(step)
         self._last = int(step)
-        if self.pointer:
-            from repro.serve.snapshot import publish_pointer
-            publish_pointer(self.directory, out)
-        self._prune()
-        return out
+        if self.role == "write":
+            out = save(out, tree, extra=extra)
+            self._barrier(step)                # validators read after this
+            if self.pointer:
+                from repro.serve.snapshot import publish_pointer
+                publish_pointer(self.directory, out)
+            self._prune()
+            return out
+        # validate: checksum THIS replica, then verify the written file
+        local = _checksum(_flatten(tree)[0])
+        self._barrier(step)                    # writer's atomic publish done
+        _, meta = _load(out)
+        if meta.get("checksum") != local:
+            raise CheckpointError(
+                f"process replica diverged at step {step}: local engine "
+                f"state checksums {local} but the written checkpoint "
+                f"{out!r} has {meta.get('checksum')} — replicated "
+                f"params/state are no longer identical across processes")
+        return _norm_path(out)
 
     def maybe_save(self, step: int, **engine_kwargs) -> Optional[str]:
         if not self.every or int(step) // self.every <= self._last // self.every:

@@ -188,10 +188,14 @@ def test_chunked_hybrid_bit_exact_vs_per_step_hybrid():
 # mesh hygiene + ring on a 2-D mesh
 # ---------------------------------------------------------------------------
 def test_make_host_mesh_rejects_non_divisible_model_parallel():
+    """Library code raises MeshError (a ValueError) — never SystemExit;
+    only the CLI boundary in launch/train.py translates to an exit code."""
+    from repro.launch.mesh import MeshError
     n = len(jax.devices())
-    with pytest.raises(SystemExit, match=f"n={n} devices, M={2 * n}"):
+    with pytest.raises(MeshError, match=f"n={n} devices, M={2 * n}"):
         make_host_mesh(model=2 * n)
-    with pytest.raises(SystemExit, match="M=0"):
+    assert issubclass(MeshError, ValueError)
+    with pytest.raises(MeshError, match="M=0"):
         make_host_mesh(model=0)
     mesh = make_host_mesh(model=n)          # every divisor is fine
     assert dict(mesh.shape) == {"data": 1, "model": n}
