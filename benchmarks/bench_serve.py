@@ -79,8 +79,7 @@ def run_oneshot_bucketed(engine, reqs, max_batch):
     return useful, time.perf_counter() - t0
 
 
-def pct(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+from repro.obs.stats import percentile as pct
 
 
 def lat_stats(comps):

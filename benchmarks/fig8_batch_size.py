@@ -20,6 +20,7 @@ from repro.configs import CIFAR_QUICK
 from repro.core import ISGDConfig, batch_model
 from repro.data import FCPRSampler, make_classification
 from repro.models import cnn_loss_fn, init_cnn
+from repro.obs.timing import require_measured_walls
 from repro.optim import momentum
 from repro.train import train
 
@@ -46,11 +47,8 @@ def run():
             inconsistent=False,
             isgd_cfg=ISGDConfig(n_batches=sampler.n_batches),
             step_sync=True)   # Eq.21 fit needs true per-step wall deltas
-        if any(log.wall_est):
-            raise RuntimeError(
-                "refusing to fit Eq.21 on estimated walls: the log carries "
-                "dispatch-time/chunk-end estimates (step_sync=False or the "
-                "fused engine); rerun with per-step synced timing")
+        require_measured_walls(log.wall_est,
+                               context=f"fig8_batch_size bs={bs}")
         wall = np.array(log.wall)
         psi = np.array(log.psi_bar)
         hit = np.where(psi <= target_loss)[0]

@@ -120,9 +120,11 @@ def _worker(args) -> None:
         state, params, m = step(state, params, prefetch(j))
     jax.block_until_ready(m["loss"])
     dt = (time.perf_counter() - t0) / steps
+    # trailing 1 = measured flag: the wall above is bracketed by
+    # block_until_ready, never a dispatch-time estimate (Eq.21 fit guard)
     print(f"RESULT {n_dev} {args.per_device_batch} {dt*1e3:.3f} "
           f"{global_batch/dt:.1f} {global_batch} "
-          f"{topo.num_processes} {jax.local_device_count()}", flush=True)
+          f"{topo.num_processes} {jax.local_device_count()} 1", flush=True)
 
 
 def _worker_async(args) -> None:
@@ -163,7 +165,7 @@ def _worker_async(args) -> None:
     _, _, records = coord.run(params0, sampler, pushes)
     dt = (time.perf_counter() - t0) / len(records)
     print(f"RESULT {n} {b} {dt*1e3:.3f} {b/dt:.1f} {b} "
-          f"1 {jax.local_device_count()}", flush=True)
+          f"1 {jax.local_device_count()} 1", flush=True)
 
 
 def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
@@ -186,13 +188,17 @@ def _spawn(engine: str, devices: int, per_device_batch: int, steps: int,
         capture_output=True, text=True, env=env, cwd=root, timeout=1200)
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT "):
-            _, n, b, ms, sps, gb, nproc, ldev = line.split()
+            fields = line.split()
+            _, n, b, ms, sps, gb, nproc, ldev = fields[:8]
+            # older workers had no measured flag; their walls were synced
+            measured = bool(int(fields[8])) if len(fields) > 8 else True
             return {"engine": engine, "devices": int(n),
                     "model_parallel": model_parallel,
                     "per_device_batch": int(b), "ms_per_step": float(ms),
                     "samples_per_s": float(sps), "global_batch": int(gb),
                     "num_processes": int(nproc),
-                    "local_device_count": int(ldev)}
+                    "local_device_count": int(ldev),
+                    "measured": measured}
     raise RuntimeError(
         f"worker engine={engine} devices={devices} b={per_device_batch} "
         f"failed:\n{proc.stdout}\n{proc.stderr}")
@@ -204,6 +210,10 @@ def _fit_c1_c2(cells):
     consumes (the worker reports it: global batch for sync/hybrid, the
     per-worker batch for async-ps — each push is one update)."""
     import numpy as np
+
+    from repro.obs.timing import require_measured_walls
+    require_measured_walls([not c.get("measured", True) for c in cells],
+                           context="fig8_scaling Eq.21 fit")
     bs = np.array([c["global_batch"] for c in cells], float)
     ts = np.array([c["ms_per_step"] * 1e-3 for c in cells])
     A = np.stack([bs, np.ones_like(bs)], axis=1)

@@ -13,6 +13,27 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+from jax import lax
+
+
+def _sq(x):
+    """x² via an exact 12/12-bit split, immune to fma contraction.
+
+    LLVM's CPU backend may or may not contract ``total_sq + x*x`` into an
+    fma depending on fusion context (it differs between the chunked scan
+    and the hybrid engine, and an HLO ``optimization_barrier`` does not
+    survive to codegen) — so a plain ``x*x`` makes Σ² codegen-dependent
+    and unreplayable by the host-side SPC mirror (``repro.obs.spc``).
+    Masking the low 12 mantissa bits splits x = hi + lo with ≤12
+    significant bits each, so hi², 2·hi·lo and lo² are all ≤24-bit
+    products — exactly representable in f32.  When every multiply is
+    exact, fma(a, b, c) ≡ round(a·b) + c, so contraction cannot change
+    the result and the remaining rounding (the adds, in this fixed
+    association) is deterministic on both device and host."""
+    xi = lax.bitcast_convert_type(x, jnp.int32)
+    hi = lax.bitcast_convert_type(jnp.bitwise_and(xi, jnp.int32(-4096)), jnp.float32)
+    lo = x - hi
+    return (hi * hi + 2.0 * (hi * lo)) + lo * lo
 
 
 class LossQueue(NamedTuple):
@@ -40,7 +61,7 @@ def push(q: LossQueue, loss) -> LossQueue:
     old = q.buf[q.idx]
     full = q.count >= n_b
     total = q.total + loss - jnp.where(full, old, 0.0)
-    total_sq = q.total_sq + loss * loss - jnp.where(full, old * old, 0.0)
+    total_sq = q.total_sq + _sq(loss) - jnp.where(full, _sq(old), 0.0)
     buf = q.buf.at[q.idx].set(loss)
     return LossQueue(
         buf=buf,
@@ -73,7 +94,7 @@ def push_at(q: LossQueue, slot, loss) -> LossQueue:
     old = q.buf[slot]
     filled = slot < q.count
     total = q.total + loss - jnp.where(filled, old, 0.0)
-    total_sq = q.total_sq + loss * loss - jnp.where(filled, old * old, 0.0)
+    total_sq = q.total_sq + _sq(loss) - jnp.where(filled, _sq(old), 0.0)
     return LossQueue(
         buf=q.buf.at[slot].set(loss),
         total=total,

@@ -130,9 +130,10 @@ def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
     base_state, params = rule.apply(state.base, params, grads, lr)
 
     # lines 13-20: queue + control limit
-    queue = (control.push(state.queue, loss) if slot is None
-             else control.push_at(state.queue, slot, loss))
-    limit = control.control_limit(queue, cfg.k_sigma)
+    with jax.named_scope("obs/psi_push"):
+        queue = (control.push(state.queue, loss) if slot is None
+                 else control.push_at(state.queue, slot, loss))
+        limit = control.control_limit(queue, cfg.k_sigma)
     accelerate = (loss > limit)          # warm-up handled by limit=+inf
 
     # line 22-23: conservative subproblem on the under-trained batch
@@ -140,7 +141,8 @@ def isgd_step(rule: UpdateRule, cfg: ISGDConfig, loss_and_grad: Callable,
         def lg(w):
             (l, _), g = loss_and_grad(w, batch)
             return l, g
-        return solve_subproblem(lg, p, limit, loss, lr, cfg)
+        with jax.named_scope("obs/accelerate"):
+            return solve_subproblem(lg, p, limit, loss, lr, cfg)
 
     def no_accel(p):
         return p, jnp.zeros((), jnp.int32)

@@ -69,7 +69,6 @@ unchanged; chunked engines take ``ring.arrays`` directly.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Dict, Optional, Tuple, Union
 
 import jax
@@ -227,9 +226,6 @@ class DeviceRing:
                    for v in self.arrays.values())
 
 
-_FALLBACK_WARNED = False
-
-
 def ring_or_prefetch(sampler, *, mesh=None, axis: AxisSpec = "data",
                      byte_budget: Optional[int] = DEFAULT_BYTE_BUDGET,
                      prefetch_depth: int = 2, relayout: bool = True):
@@ -258,18 +254,18 @@ def ring_or_prefetch(sampler, *, mesh=None, axis: AxisSpec = "data",
         else:
             n_dev = 1
         if sampler.epoch_nbytes() > byte_budget * n_dev:
-            global _FALLBACK_WARNED
-            if mesh is not None and _is_multiprocess(mesh) \
-                    and not _FALLBACK_WARNED:
-                _FALLBACK_WARNED = True
-                warnings.warn(
+            if mesh is not None and _is_multiprocess(mesh):
+                # keyed + coordinator-gated: fires once, on process 0 only
+                from repro.obs.console import CONSOLE
+                CONSOLE.warn_once(
+                    "device_ring.prefetch_fallback",
                     f"epoch ({sampler.epoch_nbytes()} B) exceeds the "
                     f"device-ring byte budget ({byte_budget} B/replica x "
                     f"{n_dev}); falling back to per-step prefetch on a "
                     f"multi-process mesh — the data feed becomes a "
                     f"per-step cross-process upload instead of one "
                     f"resident epoch stripe. Raise byte_budget (or pass "
-                    f"None) to keep the ring.", UserWarning, stacklevel=2)
+                    f"None) to keep the ring.")
             from repro.distributed.prefetch import prefetched
             return prefetched(sampler, mesh, axis=axis, depth=prefetch_depth)
     return DeviceRing(sampler.epoch_arrays(), sampler.batch_size,

@@ -297,7 +297,8 @@ class AsyncPSCoordinator:
                  inconsistent: bool = True, micro_batches: int = 1,
                  elastic: bool = False, deadline_s: float = 120.0,
                  faults: FaultPlan = NO_FAULTS, verify_pushes: bool = False,
-                 push_retries: int = 3):
+                 push_retries: int = 3, recorder=None):
+        self.recorder = recorder          # obs: push/fold latency + events
         self.rule = rule
         self.isgd_cfg = isgd_cfg
         self.workers = workers
@@ -364,7 +365,8 @@ class AsyncPSCoordinator:
                              inconsistent=self.inconsistent,
                              verify_pushes=self.verify_pushes,
                              checkpoint_fn=checkpoint_fn,
-                             checkpoint_every=checkpoint_every)
+                             checkpoint_every=checkpoint_every,
+                             recorder=self.recorder)
         if resume is not None:
             server.load_snapshot(resume)
         clocks = server.pushed_clocks()

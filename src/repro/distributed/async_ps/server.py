@@ -102,8 +102,11 @@ class ParamServer:
                  reduce_ctx: Optional[StalenessReduce] = None,
                  inconsistent: bool = True, verify_pushes: bool = False,
                  checkpoint_fn: Optional[Callable[[dict], None]] = None,
-                 checkpoint_every: int = 0):
+                 checkpoint_every: int = 0, recorder=None):
         self._lock = threading.Lock()
+        # obs ingestion rides the push commit — already a host sync point
+        # (worker threads round-trip the host every step by design)
+        self._recorder = recorder
         self._params = params
         self._base = base
         self._queue = control.init_queue(isgd_cfg.n_batches)
@@ -174,20 +177,26 @@ class ParamServer:
                     f"worker {worker}: delta checksum mismatch on arrival "
                     f"(sent {checksum}, received {got}) — payload corrupted "
                     f"in transit; rejecting the push")
+        t_enter = time.perf_counter()
         with self._lock:
             if worker in self._evicted:
                 raise WorkerEvicted(
                     f"worker {worker} push rejected: worker was evicted")
             tau = self._version - snap.version
             assert tau >= 0, (tau, self._version, snap.version)
+            t_fold = time.perf_counter()
             if tau == 0:
                 self._params = final_params
                 self._base = final_base
             else:
-                w = self._ctx.weight(tau)
-                self._params = _fold_fn(self._params, final_params,
-                                        snap.params, w)
-                self._base = _fold_fn(self._base, final_base, snap.base, w)
+                from repro.obs.timing import annotate
+                with annotate("obs/ps_fold"):
+                    w = self._ctx.weight(tau)
+                    self._params = _fold_fn(self._params, final_params,
+                                            snap.params, w)
+                    self._base = _fold_fn(self._base, final_base,
+                                          snap.base, w)
+            fold_s = time.perf_counter() - t_fold
             self._version += 1
             self._iter += 1
             self._accel_count += int(metrics.get("accelerated", False))
@@ -201,7 +210,13 @@ class ParamServer:
                 # under the lock on purpose: the snapshot must pair the
                 # just-applied push with its clock (crash consistency)
                 self._ckpt_fn(self._snapshot_locked())
-            return tau
+        if self._recorder is not None:
+            # outside the lock: recording must not serialize healthy pushes
+            self._recorder.observe("async_ps/push_commit_s",
+                                   time.perf_counter() - t_enter)
+            if tau > 0:
+                self._recorder.observe("async_ps/fold_s", fold_s)
+        return tau
 
     # -- elasticity / durability -------------------------------------------
     def mark_evicted(self, worker: int) -> None:

@@ -177,10 +177,11 @@ def is_coordinator() -> bool:
 
 
 def p0print(*args, **kwargs) -> None:
-    """Print only on process 0 — multi-process runs would otherwise
-    interleave N copies of every progress line."""
-    if is_coordinator():
-        print(*args, **kwargs)
+    """Print only on process 0 — delegates to the obs console sink
+    (``repro.obs.console.CONSOLE``), the one mechanism that keeps non-zero
+    processes quiet for progress lines and warnings alike."""
+    from repro.obs.console import CONSOLE
+    CONSOLE.print(*args, **kwargs)
 
 
 def add_process_args(parser) -> None:

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.configs import ZOO_MODELS, ZOO_TIERS, get_config, zoo_config
 from repro.models import build_model
+from repro.obs.stats import percentile
+from repro.obs.timing import maybe_profile
 from repro.serve import (ContinuousScheduler, Request, ServeEngine,
                          SnapshotWatcher)
 
@@ -93,17 +95,14 @@ def run_oneshot(args, cfg, model, params):
                                       args.prompt_len + args.decode_steps])
 
 
-def percentile(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
-
-
-def run_continuous(args, cfg, model, params, watcher):
+def run_continuous(args, cfg, model, params, watcher, recorder=None):
     reqs = workload(args, cfg.vocab_size)
 
     sched = ContinuousScheduler(
         model, params, max_batch=args.max_batch, max_seq=args.max_seq,
         max_decode_batch=args.max_decode_batch, max_queue=args.max_queue,
-        watcher=watcher, swap_poll_every=args.swap_poll_every)
+        watcher=watcher, swap_poll_every=args.swap_poll_every,
+        recorder=recorder)
 
     # warmup on the same scheduler (jit caches are per-SlotKV instance):
     # a miniature copy of the workload covers every prompt-length bucket,
@@ -130,6 +129,11 @@ def run_continuous(args, cfg, model, params, watcher):
     for ev in sched.swap_events:
         print(f"  swap @step {ev.step}: generation {ev.generation} "
               f"(trainer step {ev.trainer_step}, load {ev.load_seconds:.2f}s)")
+    if recorder is not None:
+        recorder.event("serve.summary", tokens=n_tok, wall_s=dt,
+                       tokens_per_s=n_tok / dt if dt else 0.0,
+                       compile_s=compile_s, **sched.latency_summary())
+        recorder.flush()
     c0 = comps[0]
     print("sample continuation:", np.asarray(c0.tokens))
 
@@ -184,6 +188,16 @@ def main():
                     help="seconds to wait for the first published snapshot")
     ap.add_argument("--swap-poll-every", type=int, default=8,
                     help="decode steps between watcher polls")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write structured metrics/event JSONL here "
+                         "(repro.obs; admit/retire/swap events, token-gap "
+                         "histograms, final latency summary)")
+    ap.add_argument("--obs-console-every", type=int, default=0,
+                    help="with --obs-dir: also print a console metrics "
+                         "line at flush boundaries (0 = off)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the serve run "
+                         "into this directory")
     args = ap.parse_args()
 
     cfg = build_cfg(args)
@@ -194,6 +208,18 @@ def main():
         param_dtype=jnp.float32 if args.precision == "f32" else jnp.bfloat16)
     params = model.init(jax.random.PRNGKey(0), max_seq=args.max_seq)
 
+    recorder = None
+    if args.obs_dir:
+        from repro.obs import (ConsoleSink, JsonlSink, MetricsRecorder,
+                               jsonl_path, write_merged_summary)
+        sinks = [JsonlSink(jsonl_path(args.obs_dir, 0))]
+        if args.obs_console_every:
+            sinks.append(ConsoleSink(every=args.obs_console_every,
+                                     step_counter="serve/retired"))
+        recorder = MetricsRecorder(
+            sinks, tags={"process_id": 0, "engine": f"serve-{args.engine}",
+                         "model": cfg.name})
+
     watcher = None
     if args.watch:
         if not args.publish_dir:
@@ -202,16 +228,24 @@ def main():
             raise SystemExit("--watch requires --engine continuous (the "
                              "one-shot engine has no between-step swap "
                              "point)")
-        watcher = SnapshotWatcher(args.publish_dir, params_like=params)
+        watcher = SnapshotWatcher(args.publish_dir, params_like=params,
+                                  recorder=recorder)
         snap = watcher.wait_for_first(timeout=args.watch_timeout)
         params = snap.params
         print(f"serving snapshot generation {snap.generation} "
               f"(trainer step {snap.step}, {snap.path})")
 
-    if args.engine == "oneshot":
-        run_oneshot(args, cfg, model, params)
-    else:
-        run_continuous(args, cfg, model, params, watcher)
+    with maybe_profile(args.profile_dir):
+        if args.engine == "oneshot":
+            run_oneshot(args, cfg, model, params)
+        else:
+            run_continuous(args, cfg, model, params, watcher,
+                           recorder=recorder)
+
+    if recorder is not None:
+        recorder.close()
+        write_merged_summary(args.obs_dir)
+        print(f"obs: {args.obs_dir}")
 
 
 if __name__ == "__main__":

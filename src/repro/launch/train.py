@@ -104,7 +104,6 @@ from __future__ import annotations
 
 import argparse
 import contextlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +123,7 @@ from repro.launch import shardings as SH
 from repro.launch.mesh import (MeshError, is_multiprocess, make_data_mesh,
                                make_training_mesh)
 from repro.models import build_model
+from repro.obs.timing import StepTimer, maybe_profile
 from repro.optim import RULES
 from repro.sharding import activation_sharding, rules
 
@@ -152,15 +152,19 @@ def ring_epoch(cfg, sampler, batch_size: int):
 
 
 def _drive_chunks(jchunk, state, params, ring, steps: int, k: int, *,
-                  start: int = 0, ckpt=None):
+                  start: int = 0, ckpt=None, obs=None):
     """Run from global step ``start`` to ``steps`` (rounded up to whole
     chunks) through a fused chunk fn, printing the last step of each chunk.
     ``start`` may sit mid-chunk relative to the K grid — ``chunk_fn`` takes
     an arbitrary ``j0`` (what makes resume-from-checkpoint possible).
-    Returns (state, total_steps)."""
+    Returns (state, total_steps).  ``obs`` ingests each chunk's stacked
+    metrics at the chunk boundary (the fetch below is already the one host
+    sync per chunk — obs adds no dispatches)."""
     j = start
     while j < steps:
         state, params, ms = jchunk(state, params, ring.arrays, j)
+        if obs is not None:
+            obs.chunk(j, ms)
         j += k
         ENV.p0print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
@@ -172,15 +176,20 @@ def _drive_chunks(jchunk, state, params, ring, steps: int, k: int, *,
 
 
 def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
-                     k: int, *, start: int = 0, ckpt=None):
+                     k: int, *, start: int = 0, ckpt=None, obs=None):
     """Drive a scheduled engine (per-step when ``k == 1``, fused chunks
     otherwise), printing the last step of each dispatch group including the
     policy's realized batch pick.  Returns (state, total_steps)."""
+    from repro.sched.engine import selection_counts
     if k == 1:
         for j in range(start, steps):
             state, params, sched_state, m = jfn(state, params, sched_state,
                                                 ring.arrays, j)
+            if obs is not None:
+                obs.defer(j, m)
             if (j + 1) % 5 == 0 or j == 0:
+                if obs is not None:
+                    obs.flush()
                 ENV.p0print(f"step {j+1:4d} batch={int(m['batch_idx'])} "
                       f"loss={float(m['loss']):.4f} "
                       f"psi_bar={float(m['psi_bar']):.4f} "
@@ -189,14 +198,17 @@ def _drive_scheduled(jfn, state, params, sched_state, ring, steps: int,
             if ckpt is not None:
                 ckpt.maybe_save(j + 1, params=params, state=state,
                                 sched_state=sched_state)
+        if obs is not None:
+            obs.flush()
         return state, steps
     j = start
     while j < steps:
         state, params, sched_state, ms = jfn(state, params, sched_state,
                                              ring.arrays, j)
+        if obs is not None:
+            obs.chunk(j, ms)
         j += k
-        visits = np.bincount(np.asarray(ms["batch_idx"]),
-                             minlength=ring.n_batches)
+        visits = selection_counts(ms["batch_idx"], ring.n_batches)
         ENV.p0print(f"step {j:4d} loss={float(ms['loss'][-1]):.4f} "
               f"psi_bar={float(ms['psi_bar'][-1]):.4f} "
               f"limit={float(ms['limit'][-1]):.4f} "
@@ -233,7 +245,7 @@ class _TeeCheckpointer:
         return self.ckpts[0].latest()
 
 
-def _make_checkpointer(args):
+def _make_checkpointer(args, recorder=None):
     """``--checkpoint-dir``/``--checkpoint-every`` → a ``Checkpointer``;
     ``--publish-dir`` adds (or upgrades to) a *publishing* checkpointer
     that maintains the atomic ``LATEST`` pointer a serving
@@ -248,14 +260,15 @@ def _make_checkpointer(args):
     if args.checkpoint_dir:
         ckpts.append(Checkpointer(args.checkpoint_dir,
                                   every=args.checkpoint_every,
-                                  pointer=bool(same)))
+                                  pointer=bool(same), recorder=recorder))
     if publish_dir and not same:
         every = args.publish_every or args.checkpoint_every
         if not every:
             raise SystemExit("--publish-dir needs --publish-every (or "
                              "--checkpoint-every) to set the snapshot "
                              "cadence")
-        ckpts.append(Checkpointer(publish_dir, every=every, pointer=True))
+        ckpts.append(Checkpointer(publish_dir, every=every, pointer=True,
+                                  recorder=recorder))
     if not ckpts:
         if args.resume:
             raise SystemExit("--resume needs --checkpoint-dir")
@@ -282,12 +295,48 @@ def _maybe_resume(args, ckpt, *, params_like, state_like, sched_like=None):
     return ck
 
 
+def _make_observer(args, cfg, icfg, engine: str):
+    """``--obs-dir`` → a ``TrainObserver`` writing this process's JSONL
+    (tagged process_id/engine/model), or None when obs is off.
+
+    The SPC exporter mirrors the queue discipline of the selected engine:
+    per-batch table replay for ``uses_table`` schedules, FIFO otherwise.
+    Multi-worker async-PS runs push in commit order but observe losses in a
+    (possibly different) race order, so their table replay is chart-only —
+    counters still reconcile exactly (``replay_exact=False``)."""
+    if not args.obs_dir:
+        return None
+    import os
+
+    from repro.obs import (ConsoleSink, JsonlSink, MetricsRecorder,
+                           TrainObserver, jsonl_path)
+    topo = ENV.topology()
+    os.makedirs(args.obs_dir, exist_ok=True)
+    sinks = [JsonlSink(jsonl_path(args.obs_dir, topo.process_id))]
+    if args.obs_console_every:
+        sinks.append(ConsoleSink(every=args.obs_console_every))
+    rec = MetricsRecorder(sinks, tags={"process_id": topo.process_id,
+                                       "engine": engine, "model": cfg.name})
+    table = False
+    if args.schedule is not None and engine != "async-ps":
+        from repro.sched import schedule_from_spec
+        table = schedule_from_spec(args.schedule).uses_table
+    replay_exact = engine != "async-ps" or args.workers == 1
+    return TrainObserver(rec, n_batches=icfg.n_batches,
+                         k_sigma=icfg.k_sigma, table=table,
+                         examples_per_step=args.batch,
+                         replay_exact=replay_exact)
+
+
 def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
-             engine: str = "hybrid"):
+             engine: str = "hybrid", obs=None):
     """The synchronous engines — ``hybrid`` (DP × TP, 2-D mesh) and
     ``data-parallel`` (1-D mesh) — one driving loop, one step path
     (``make_step_core`` under the hybrid shard_map engine).  Returns
-    ``(state, wall_seconds, steps_run)``."""
+    ``(state, wall_seconds, steps_run)``.  ``obs`` (a
+    ``repro.obs.TrainObserver``) ingests metrics at the existing chunk/log
+    boundaries only."""
+    timer = obs.timer if obs is not None else StepTimer()
     if engine == "data-parallel":
         if args.model_parallel != 1:
             raise SystemExit("--model-parallel composes with --engine "
@@ -357,7 +406,8 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
             schedule=schedule)
     state = init_fn(params)
     s_sh = SH.state_shardings(mesh, jax.eval_shape(lambda: state), p_sh)
-    ckpt = _make_checkpointer(args)
+    ckpt = _make_checkpointer(args,
+                              recorder=obs.recorder if obs is not None else None)
     start = 0
 
     put_repl = ((lambda t, _sh: replicate_to_mesh(t, mesh)) if multiproc
@@ -376,12 +426,12 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                 params = put_repl(ck.params, p_sh)
                 state = put_repl(ck.state, s_sh)
                 sched_state, start = ck.sched_state, ck.step
-            t0 = time.perf_counter()
-            state, steps = _drive_scheduled(jstep, state, params,
-                                            sched_state, ring, args.steps,
-                                            args.chunk_steps, start=start,
-                                            ckpt=ckpt)
-            return state, time.perf_counter() - t0, steps - start
+            with timer.span("train"):
+                state, steps = _drive_scheduled(jstep, state, params,
+                                                sched_state, ring, args.steps,
+                                                args.chunk_steps, start=start,
+                                                ckpt=ckpt, obs=obs)
+            return state, timer.seconds("train"), steps - start
         ck = _maybe_resume(args, ckpt, params_like=params, state_like=state)
         if ck is not None:
             params = put_repl(ck.params, p_sh)
@@ -394,11 +444,11 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
             ring = DeviceRing(ring_epoch(cfg, sampler, args.batch),
                               args.batch, mesh=mesh, axis=None,
                               relayout=not tp)
-            t0 = time.perf_counter()
-            state, steps = _drive_chunks(jstep, state, params, ring,
-                                         args.steps, args.chunk_steps,
-                                         start=start, ckpt=ckpt)
-            return state, time.perf_counter() - t0, steps - start
+            with timer.span("train"):
+                state, steps = _drive_chunks(jstep, state, params, ring,
+                                             args.steps, args.chunk_steps,
+                                             start=start, ckpt=ckpt, obs=obs)
+            return state, timer.seconds("train"), steps - start
 
         if multiproc:
             # the host prefetcher's device_put cannot address other
@@ -422,21 +472,28 @@ def run_sync(args, cfg, model, sampler, rule, icfg, lr_fn, *,
                 feed = PrefetchSampler(
                     sampler,
                     sharding=SH.data_parallel_shardings(mesh, sampler(0)))
-        t0 = time.perf_counter()
-        for j in range(start, args.steps):
-            batch = dict(feed(j), **extra)
-            state, params, m = jstep(state, params, batch)
-            if (j + 1) % 5 == 0 or j == 0:
-                ENV.p0print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
-                      f"psi_bar={float(m['psi_bar']):.4f} "
-                      f"limit={float(m['limit']):.4f} "
-                      f"accel={bool(m['accelerated'])}")
-            if ckpt is not None:
-                ckpt.maybe_save(j + 1, params=params, state=state)
-        return state, time.perf_counter() - t0, args.steps - start
+        with timer.span("train"):
+            for j in range(start, args.steps):
+                batch = dict(feed(j), **extra)
+                state, params, m = jstep(state, params, batch)
+                if obs is not None:
+                    obs.defer(j, m)
+                if (j + 1) % 5 == 0 or j == 0:
+                    # the print below host-syncs anyway: flush obs here too
+                    if obs is not None:
+                        obs.flush()
+                    ENV.p0print(f"step {j+1:4d} loss={float(m['loss']):.4f} "
+                          f"psi_bar={float(m['psi_bar']):.4f} "
+                          f"limit={float(m['limit']):.4f} "
+                          f"accel={bool(m['accelerated'])}")
+                if ckpt is not None:
+                    ckpt.maybe_save(j + 1, params=params, state=state)
+            if obs is not None:
+                obs.flush()
+        return state, timer.seconds("train"), args.steps - start
 
 
-def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
+def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn, *, obs=None):
     from repro.distributed import AsyncPSCoordinator, staleness_reduce_from_spec
     from repro.distributed.async_ps.coordinator import (
         snapshot_engine_kwargs, snapshot_from_checkpoint)
@@ -480,9 +537,11 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
     coord = AsyncPSCoordinator(
         model.loss_fn, rule, icfg, workers=args.workers,
         max_staleness=args.max_staleness, lr_fn=lr_fn, reduce_ctx=rctx,
-        inconsistent=not args.consistent, **kw)
+        inconsistent=not args.consistent,
+        recorder=obs.recorder if obs is not None else None, **kw)
 
-    ckpt = _make_checkpointer(args)
+    ckpt = _make_checkpointer(args,
+                              recorder=obs.recorder if obs is not None else None)
     resume = None
     if args.resume and ckpt is not None and ckpt.latest() is not None:
         from repro.core import isgd_init
@@ -503,10 +562,13 @@ def run_async_ps(args, cfg, model, sampler, rule, icfg, lr_fn):
     if ckpt is not None and args.checkpoint_every:
         run_kw = dict(checkpoint_fn=checkpoint_fn,
                       checkpoint_every=args.checkpoint_every)
-    t0 = time.perf_counter()
-    params, state, records = coord.run(params, sampler, args.steps,
-                                       resume=resume, **run_kw)
-    dt = time.perf_counter() - t0
+    timer = obs.timer if obs is not None else StepTimer()
+    with timer.span("train"):
+        params, state, records = coord.run(params, sampler, args.steps,
+                                           resume=resume, **run_kw)
+    dt = timer.seconds("train")
+    if obs is not None:
+        obs.async_run(records, coord.events)
     for ev in coord.events:
         print(f"event: {ev}")
     for i, r in enumerate(records):
@@ -630,6 +692,19 @@ def main():
                     help="async-ps: workers checksum their deltas and the "
                          "server rejects corrupt arrivals (rejected/"
                          "transient pushes retry with backoff)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="telemetry directory (repro.obs): per-process "
+                         "metrics.pN.jsonl with the live SPC control chart, "
+                         "counters and events; process 0 folds a merged "
+                         "summary.json.  Ingestion only at existing host-"
+                         "sync boundaries — zero extra dispatches")
+    ap.add_argument("--obs-console-every", type=int, default=0,
+                    help="print a one-line obs counter summary every N "
+                         "steps (0 = off; needs --obs-dir)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the run into this "
+                         "directory (named annotations around the chunk "
+                         "scan, psi push, accelerate subproblem, PS fold)")
     ENV.add_process_args(ap)
     args = ap.parse_args()
 
@@ -675,16 +750,30 @@ def main():
                              else "hybrid")
     if engine == "pjit":
         engine = "hybrid"                 # historical alias, same engine
+    obs = _make_observer(args, cfg, icfg, engine)
     try:
-        if engine == "async-ps":
-            state, dt, steps = run_async_ps(args, cfg, model, sampler, rule,
-                                            icfg, lr_fn)
-        else:
-            state, dt, steps = run_sync(args, cfg, model, sampler, rule,
-                                        icfg, lr_fn, engine=engine)
+        with maybe_profile(args.profile_dir):
+            if engine == "async-ps":
+                state, dt, steps = run_async_ps(args, cfg, model, sampler,
+                                                rule, icfg, lr_fn, obs=obs)
+            else:
+                state, dt, steps = run_sync(args, cfg, model, sampler, rule,
+                                            icfg, lr_fn, engine=engine,
+                                            obs=obs)
     except MeshError as e:
         # the CLI boundary: library validation errors become exit codes
         raise SystemExit(str(e))
+    if obs is not None:
+        # a resumed run missed the pre-restart pushes: chart only, no
+        # reconcile claim
+        final = obs.finalize(None if args.resume else state,
+                             steps=steps, wall=dt)
+        if ENV.is_coordinator():
+            from repro.obs.recorder import write_merged_summary
+            write_merged_summary(args.obs_dir)
+        ENV.p0print(f"obs: {args.obs_dir} "
+                    f"spc_reconciled={final.get('reconciled', 'n/a')} "
+                    f"accel_events={final['accel_events']}")
     ENV.p0print(f"done: {steps} steps in {dt:.1f}s "
                 f"({dt/steps*1e3:.0f} ms/step) "
                 f"accelerated={int(state.accel_count)} "

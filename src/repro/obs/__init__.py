@@ -1,0 +1,25 @@
+"""Unified telemetry: structured metrics, live SPC chart export, timing.
+
+jax-free at import time (profiler hooks lazy-import jax) — safe to import
+from the sweep/multihost parent processes that must not initialize jax.
+See README.md in this package for the record schema and the sync-boundary
+contract.
+"""
+from repro.obs.console import CONSOLE, Console
+from repro.obs.observer import TrainObserver
+from repro.obs.recorder import (ConsoleSink, JsonlSink, MemorySink,
+                                MetricsRecorder, jsonl_path, read_jsonl,
+                                validate_record, write_merged_summary)
+from repro.obs.spc import SPCExporter
+from repro.obs.stats import percentile, summarize
+from repro.obs.timing import (EstimatedWallError, StepTimer, annotate,
+                              maybe_profile, named_scope,
+                              require_measured_walls)
+
+__all__ = [
+    "CONSOLE", "Console", "ConsoleSink", "EstimatedWallError", "JsonlSink",
+    "MemorySink", "MetricsRecorder", "SPCExporter", "StepTimer",
+    "TrainObserver", "annotate", "jsonl_path", "maybe_profile",
+    "named_scope", "percentile", "read_jsonl", "require_measured_walls",
+    "summarize", "validate_record", "write_merged_summary",
+]

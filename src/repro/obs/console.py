@@ -1,0 +1,66 @@
+"""Process-aware console sink: THE one mechanism for run output.
+
+Multi-process runs would otherwise interleave N copies of every progress
+line and every warning.  Everything user-facing that is not a metrics
+record goes through the module singleton :data:`CONSOLE`:
+
+  * ``CONSOLE.print`` — progress lines, emitted on the coordinator
+    (process 0) only.  ``repro.launch.env.p0print`` delegates here, so the
+    historical call sites keep working;
+  * ``CONSOLE.warn_once`` — keyed warnings (e.g. the
+    :func:`~repro.data.device_ring.ring_or_prefetch` demotion warning)
+    fired at most once per process *and* only on the coordinator, replacing
+    ad-hoc module-global ``_WARNED`` flags.
+
+The module is jax-free at import time (the fig8 sweep parent and the
+multihost parity parent never import jax); the coordinator check is
+resolved lazily through ``repro.launch.env`` at call time.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable, Optional
+
+
+class Console:
+    """Coordinator-gated stdout + a warn-once registry.
+
+    ``active_fn`` overrides the "am I the coordinator?" predicate — tests
+    inject a constant; production resolves ``repro.launch.env
+    .is_coordinator()`` lazily so importing this module never touches jax.
+    """
+
+    def __init__(self, active_fn: Optional[Callable[[], bool]] = None):
+        self._active_fn = active_fn
+        self._warned: set = set()
+
+    def _active(self) -> bool:
+        if self._active_fn is not None:
+            return self._active_fn()
+        from repro.launch import env as ENV
+        return ENV.is_coordinator()
+
+    def print(self, *args, **kwargs) -> None:
+        """Print on the coordinator process only."""
+        if self._active():
+            print(*args, **kwargs)
+
+    def warn_once(self, key: str, message: str, *,
+                  category=UserWarning, stacklevel: int = 3) -> bool:
+        """Emit ``message`` as a warning at most once per ``key`` (and only
+        on the coordinator).  Returns True the first time the key fires —
+        callers can hang extra bookkeeping off it."""
+        if key in self._warned:
+            return False
+        self._warned.add(key)
+        if self._active():
+            warnings.warn(message, category, stacklevel=stacklevel)
+        return True
+
+    def reset(self) -> None:
+        """Forget fired warn-once keys (tests)."""
+        self._warned.clear()
+
+
+#: the process-wide console every launcher/library warning routes through
+CONSOLE = Console()

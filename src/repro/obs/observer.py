@@ -1,0 +1,133 @@
+"""`TrainObserver` — the one object launch drivers thread through a run.
+
+Bundles a :class:`~repro.obs.recorder.MetricsRecorder`, a
+:class:`~repro.obs.spc.SPCExporter` and a
+:class:`~repro.obs.timing.StepTimer`, and owns the *boundary discipline*:
+
+* per-step engines ``defer()`` device metric handles and ``flush()`` them
+  at the existing log/eval print boundaries (the handles are tiny scalar
+  buffers; conversion happens at the boundary, not per step);
+* the fused chunk engines call ``chunk()`` with the stacked metrics the
+  driver already fetched — the only host transfer the chunk path ever
+  does, so obs adds zero dispatches (pinned by ``tests/test_obs.py``);
+* ``finalize(state)`` emits the Fig. 3 ``spc.final`` snapshot with the
+  bit-exact reconcile verdict against the engine's ``ISGDState`` and
+  closes the recorder.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.obs.recorder import MetricsRecorder
+from repro.obs.spc import SPCExporter
+from repro.obs.timing import StepTimer
+
+_SKIP_KEYS = ("aux",)  # pytree payloads — not chartable scalars
+
+
+def _host_metrics(metrics: dict) -> dict:
+    return {k: np.asarray(v) for k, v in metrics.items() if k not in _SKIP_KEYS}
+
+
+class TrainObserver:
+    def __init__(self, recorder: MetricsRecorder, *, n_batches: int,
+                 k_sigma: float = 3.0, table: bool = False,
+                 examples_per_step: int = 0, replay_exact: bool = True,
+                 emit_steps: bool = True):
+        self.recorder = recorder
+        self.spc = SPCExporter(n_batches, k_sigma,
+                               mode="table" if table else "fifo",
+                               recorder=recorder, emit_steps=emit_steps)
+        self.timer = StepTimer(recorder)
+        self.examples_per_step = int(examples_per_step)
+        self.replay_exact = replay_exact
+        self._pending: List[Tuple[int, dict]] = []
+        self._visits: Optional[np.ndarray] = None
+        self._n_batches = int(n_batches)
+        self._finalized = None
+
+    # ------------------------------------------------------ per-step path
+    def defer(self, step: int, metrics: dict) -> None:
+        """Buffer a step's device metrics; no host transfer until flush()."""
+        self._pending.append((int(step), metrics))
+
+    def flush(self) -> None:
+        """Drain deferred metrics (log/eval boundary — already a host sync)."""
+        for step, m in self._pending:
+            self._ingest_step(step, _host_metrics(m))
+        self._pending.clear()
+        self.recorder.flush()
+
+    # ------------------------------------------------------- chunked path
+    def chunk(self, first_step: int, stacked_metrics: dict) -> None:
+        """Ingest one fused chunk's stacked metrics (already fetched by the
+        driver at the chunk boundary — the existing host sync)."""
+        host = _host_metrics(stacked_metrics)
+        n = int(np.asarray(host["loss"]).shape[0])
+        for i in range(n):
+            self._ingest_step(first_step + i, {k: v[i] for k, v in host.items()})
+        self.recorder.counter("train/dispatches")
+        self.recorder.flush()
+
+    # ----------------------------------------------------------- internals
+    def _ingest_step(self, step: int, host: dict) -> None:
+        batch = host.get("batch_idx")
+        batch = None if batch is None else int(batch)
+        self.spc.ingest(step, host, batch=batch)
+        if batch is not None:
+            if self._visits is None:
+                self._visits = np.zeros(self._n_batches, dtype=np.int64)
+            self._visits[batch] += 1
+        self.recorder.counter("train/steps")
+        if self.examples_per_step:
+            self.recorder.counter("train/examples", self.examples_per_step)
+
+    # ------------------------------------------------------------ wrap-up
+    def async_run(self, records, events=()) -> None:
+        """Ingest an async-PS run: the server's per-push records (in commit
+        order) + coordinator eviction/crash events."""
+        for i, r in enumerate(records):
+            self._ingest_step(i, {k: np.asarray(v) for k, v in r.items()
+                                  if k in ("loss", "psi_bar", "psi_std", "limit",
+                                           "accelerated", "sub_iters")})
+            self.recorder.observe("async_ps/tau", r["tau"])
+            self.recorder.counter("async_ps/pushes")
+        for ev in events:
+            name = ev.get("event", "event")
+            self.recorder.event(f"async_ps.{name}",
+                                **{k: v for k, v in ev.items() if k != "event"})
+        self.recorder.flush()
+
+    def finalize(self, state=None, *, steps: int = 0, wall: float = 0.0,
+                 dispatches: int = 0, close: bool = True) -> dict:
+        """Flush everything, emit the ``spc.final`` chart snapshot (with the
+        reconcile verdict when the final engine state is given) and the run
+        throughput; returns the final payload."""
+        if self._finalized is not None:
+            return self._finalized
+        self.flush()
+        if self._visits is not None:
+            self.recorder.event("sched.visits", counts=self._visits.tolist())
+        payload = self.spc.chart_payload()
+        if state is not None:
+            verdict = self.spc.reconcile(state, replay_exact=self.replay_exact)
+            payload.update(verdict)
+            payload["engine_counters"] = {
+                "iter": int(np.asarray(state.iter)),
+                "accel_count": int(np.asarray(state.accel_count)),
+                "sub_iters": int(np.asarray(state.sub_iters)),
+            }
+        if wall:
+            self.timer.add("run", wall)
+            payload["throughput"] = self.timer.throughput(
+                "run", steps=steps,
+                examples=steps * self.examples_per_step,
+                dispatches=dispatches or int(self.recorder.total("train/dispatches")))
+        self.recorder.event("spc.final", **payload)
+        self.recorder.flush()
+        if close:
+            self.recorder.close()
+        self._finalized = payload
+        return payload

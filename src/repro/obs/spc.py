@@ -1,0 +1,220 @@
+"""Live SPC control-chart export — the paper's Fig. 3 view, reconstructed
+at host-sync flush points and reconciled bit-exactly with the engine.
+
+The exporter maintains a **host-side float32 mirror** of the engine's
+``LossQueue``, replaying the exact arithmetic of ``control.push`` /
+``control.push_at`` (same op order, IEEE-754 single precision) on the
+per-step losses fetched at chunk/log boundaries.  Because both sides do
+the identical sequence of f32 adds/multiplies, the mirror's ring buffer
+(the per-batch ψ table), Σ, Σ², count and ring index match the device
+queue **bit for bit** — :meth:`SPCExporter.reconcile` asserts it against
+the final ``ISGDState``.
+
+Accelerate decisions are *never* recomputed: ``accelerated``/``sub_iters``
+come from the engine's own metrics stream, so the exported accelerate-event
+records sum exactly to ``state.accel_count`` / ``state.sub_iters``.  Chart
+statistics (ψ̄, limit) are likewise taken from the engine metrics — the
+mirror only owns the table.
+
+Two modes mirror the two queue write disciplines:
+
+* ``fifo`` — FCPR engines (`control.push`): window = one epoch, the slot a
+  loss lands in is the ring index; batch identity is ``step % n_b``.
+* ``table`` — sched policies with ``uses_table`` (`control.push_at`): one
+  entry per batch, slot = the ``batch_idx`` the jitted schedule selected.
+"""
+from __future__ import annotations
+
+import struct
+from typing import List, Optional
+
+import numpy as np
+
+_F32 = np.float32
+
+
+def _f32(x) -> np.float32:
+    return _F32(np.asarray(x, dtype=_F32))
+
+
+def _sq(x: np.float32) -> np.float32:
+    """Mirror of ``control._sq``: x² via the exact 12/12-bit split.
+
+    The engine computes Σ²'s squares this way so that every multiply is
+    exactly representable — fma contraction in XLA codegen then cannot
+    change the result, and this replay (which has no fma) lands on
+    identical bits.  hi/lo and all partial products are ≤24-bit values,
+    exact in Python's double arithmetic, so only the two adds round —
+    through ``np.float32`` in the device's association order.  Kept off
+    numpy scalar ops (≈6 µs/call of boxing) because it runs per push on
+    the ingestion path that the <3% overhead test budgets."""
+    xf = float(_F32(x))
+    hi_bits = struct.unpack("<I", struct.pack("<f", xf))[0] & 0xFFFFF000
+    hi = struct.unpack("<f", struct.pack("<I", hi_bits))[0]
+    lo = xf - hi
+    s1 = _F32(hi * hi + 2.0 * (hi * lo))
+    return _F32(float(s1) + lo * lo)
+
+
+class SPCExporter:
+    """Replays the SPC queue on host and emits control-chart records."""
+
+    def __init__(self, n_batches: int, k_sigma: float = 3.0, *,
+                 mode: str = "fifo", recorder=None, emit_steps: bool = True):
+        if mode not in ("fifo", "table"):
+            raise ValueError(f"mode must be fifo|table, got {mode!r}")
+        self.n_batches = int(n_batches)
+        self.k_sigma = float(k_sigma)
+        self.mode = mode
+        self.recorder = recorder
+        self.emit_steps = emit_steps
+        # -- exact f32 mirror of control.LossQueue
+        self.buf = np.zeros(self.n_batches, dtype=_F32)
+        self.buf_sq = np.zeros(self.n_batches, dtype=_F32)  # _sq(buf) cache
+        self.total = _F32(0.0)
+        self.total_sq = _F32(0.0)
+        self.count = 0
+        self.idx = 0
+        # -- engine-reported accounting
+        self.steps = 0
+        self.accel_count = 0
+        self.sub_iters = 0
+        self.events: List[dict] = []
+
+    # ------------------------------------------------ queue replay (exact)
+
+    def _push(self, loss: np.float32) -> int:
+        """Mirror of control.push — same op order as the jnp version."""
+        slot = self.idx
+        old = self.buf[slot]
+        full = self.count >= self.n_batches
+        dec = old if full else _F32(0.0)
+        dec_sq = self.buf_sq[slot] if full else _F32(0.0)
+        loss_sq = _sq(loss)
+        self.total = _F32(_F32(self.total + loss) - dec)
+        self.total_sq = _F32(_F32(self.total_sq + loss_sq) - dec_sq)
+        self.buf[slot] = loss
+        self.buf_sq[slot] = loss_sq
+        self.count = min(self.count + 1, self.n_batches)
+        self.idx = (slot + 1) % self.n_batches
+        return slot
+
+    def _push_at(self, slot: int, loss: np.float32) -> int:
+        """Mirror of control.push_at (per-batch table re-keying)."""
+        old = self.buf[slot]
+        filled = slot < self.count
+        dec = old if filled else _F32(0.0)
+        dec_sq = self.buf_sq[slot] if filled else _F32(0.0)
+        loss_sq = _sq(loss)
+        self.total = _F32(_F32(self.total + loss) - dec)
+        self.total_sq = _F32(_F32(self.total_sq + loss_sq) - dec_sq)
+        self.buf[slot] = loss
+        self.buf_sq[slot] = loss_sq
+        self.count = min(max(self.count, slot + 1), self.n_batches)
+        self.idx = (slot + 1) % self.n_batches
+        return slot
+
+    # --------------------------------------------------------- ingestion
+
+    def ingest(self, step: int, metrics: dict, *, batch: Optional[int] = None) -> None:
+        """Feed one step's host-fetched metrics (loss, psi_bar, limit,
+        accelerated, sub_iters [, batch_idx via ``batch``])."""
+        loss = _f32(metrics["loss"])
+        if self.mode == "table":
+            if batch is None:
+                raise ValueError("table-mode SPC export needs the batch index")
+            slot = self._push_at(int(batch), loss)
+        else:
+            slot = self._push(loss)
+        self.steps += 1
+
+        accelerated = bool(np.asarray(metrics["accelerated"]))
+        sub = int(np.asarray(metrics["sub_iters"]))
+        psi_bar = float(np.asarray(metrics["psi_bar"]))
+        limit = float(np.asarray(metrics["limit"]))
+        batch_id = int(batch) if batch is not None else slot
+
+        if self.recorder is not None and self.emit_steps:
+            self.recorder.event(
+                "spc.step", step=int(step), batch=batch_id, psi=float(loss),
+                psi_bar=psi_bar, limit=limit, accelerated=accelerated,
+                sub_iters=sub)
+        if accelerated:
+            self.accel_count += 1
+            self.sub_iters += sub
+            ev = {"step": int(step), "batch": batch_id, "sub_iters": sub,
+                  "psi_before": float(loss), "limit": limit,
+                  "psi_bar_after": psi_bar}
+            self.events.append(ev)
+            if self.recorder is not None:
+                self.recorder.event("spc.accelerate", **ev)
+
+    # ----------------------------------------------------------- export
+
+    def psi_table(self) -> np.ndarray:
+        return self.buf.copy()
+
+    def chart_payload(self) -> dict:
+        """The Fig. 3 snapshot: per-batch ψ table + window statistics."""
+        count = max(self.count, 1)
+        psi_bar = float(_F32(self.total / _F32(count)))
+        warm = self.count >= self.n_batches
+        valid = self.buf[:self.count].astype(np.float64)
+        std = float(np.sqrt(max(((valid - psi_bar) ** 2).sum() / count, 0.0))) \
+            if self.count else 0.0
+        return {
+            "mode": self.mode,
+            "n_batches": self.n_batches,
+            "k_sigma": self.k_sigma,
+            "steps": self.steps,
+            "psi_table": [float(x) for x in self.buf],
+            "count": self.count,
+            "idx": self.idx,
+            "total": float(self.total),
+            "total_sq": float(self.total_sq),
+            "psi_bar": psi_bar,
+            "limit": (psi_bar + self.k_sigma * std) if warm else float("inf"),
+            "accel_count": self.accel_count,
+            "sub_iters": self.sub_iters,
+            "accel_events": len(self.events),
+        }
+
+    # -------------------------------------------------------- reconcile
+
+    def reconcile(self, state, *, replay_exact: bool = True) -> dict:
+        """Check the mirror against the final engine ``ISGDState``.
+
+        Bit-exact contract (``replay_exact=True``, all sync engines): the
+        ψ table, Σ, Σ² (f32 bit patterns), count, idx must match the
+        device queue; steps/accel_count/sub_iters must match the engine
+        counters.  ``replay_exact=False`` (multi-worker async-PS, where
+        record order ≠ the server's observe order) checks counters only.
+
+        Returns ``{"reconciled": bool, "mismatches": [...]}``.
+        """
+        mism: List[str] = []
+
+        def _chk(name, got, want):
+            if got != want:
+                mism.append(f"{name}: export={got} engine={want}")
+
+        _chk("steps", self.steps, int(np.asarray(state.iter)))
+        _chk("accel_count", self.accel_count, int(np.asarray(state.accel_count)))
+        _chk("sub_iters", self.sub_iters, int(np.asarray(state.sub_iters)))
+        _chk("accel_events", len(self.events), int(np.asarray(state.accel_count)))
+
+        if replay_exact:
+            q = state.queue
+            buf = np.asarray(q.buf, dtype=_F32)
+            _chk("count", self.count, int(np.asarray(q.count)))
+            _chk("idx", self.idx, int(np.asarray(q.idx)))
+            if self.buf.tobytes() != buf.tobytes():
+                bad = int((self.buf.view(np.uint32) != buf.view(np.uint32)).sum())
+                mism.append(f"psi_table: {bad}/{self.n_batches} slots differ bitwise")
+            for name, mine, theirs in (("total", self.total, q.total),
+                                       ("total_sq", self.total_sq, q.total_sq)):
+                if _f32(mine).tobytes() != _f32(np.asarray(theirs)).tobytes():
+                    mism.append(f"{name}: export={float(mine)!r} "
+                                f"engine={float(np.asarray(theirs))!r}")
+        return {"reconciled": not mism, "mismatches": mism,
+                "replay_exact": replay_exact}

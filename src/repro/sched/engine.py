@@ -28,6 +28,15 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def selection_counts(batch_idx, n_batches: int) -> np.ndarray:
+    """Visit histogram over batches from a realized ``batch_idx`` sequence
+    (a chunk's stacked metrics, or a whole run's) — the obs layer and the
+    launch drivers share this one definition."""
+    return np.bincount(np.asarray(batch_idx).ravel().astype(np.int64),
+                       minlength=n_batches)
 
 
 def make_scheduled_body(step_fn: Callable, schedule, n_batches: int,
@@ -83,9 +92,10 @@ def chunk_over_schedule(step_fn: Callable, schedule, n_batches: int,
                 state, params, sched_state, ring_arrays, j0 + off)
             return (state, params, sched_state), metrics
 
-        (state, params, sched_state), stacked = jax.lax.scan(
-            scan_body, (state, params, sched_state),
-            jnp.arange(chunk_steps, dtype=jnp.int32))
+        with jax.named_scope("obs/chunk_scan"):
+            (state, params, sched_state), stacked = jax.lax.scan(
+                scan_body, (state, params, sched_state),
+                jnp.arange(chunk_steps, dtype=jnp.int32))
         return state, params, sched_state, stacked
 
     return chunk_fn

@@ -82,7 +82,10 @@ class ContinuousScheduler:
     def __init__(self, model, params, *, max_batch: int, max_seq: int,
                  max_decode_batch: Optional[int] = None, max_queue: int = 256,
                  watcher=None, swap_poll_every: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, recorder=None):
+        # obs: admit/retire/swap are host boundaries already — events and
+        # per-token gap observations ride them; None = zero obs cost
+        self.recorder = recorder
         self.kv = SlotKV(model, params, max_batch=max_batch, max_seq=max_seq)
         self.max_seq = max_seq
         self.max_decode_batch = min(max_decode_batch or max_batch, max_batch)
@@ -104,6 +107,8 @@ class ContinuousScheduler:
         """Enqueue; False = queue full, request shed (bounded backlog)."""
         if len(self.queue) >= self.max_queue:
             self.rejected += 1
+            if self.recorder is not None:
+                self.recorder.counter("serve/rejected")
             return False
         if not req.t_submit:
             req.t_submit = time.perf_counter()
@@ -145,6 +150,13 @@ class ContinuousScheduler:
             comp.tokens.append(tok)
             comp.token_times.append(now - comp.t_admit)
             self.slots[slot] = _Slot(req, comp, now)
+            if self.recorder is not None:
+                self.recorder.counter("serve/admitted")
+                self.recorder.observe("serve/queue_wait_s",
+                                      comp.t_admit - comp.t_submit)
+                self.recorder.event("serve.admit", rid=req.rid, slot=slot,
+                                    queue_depth=len(self.queue),
+                                    active=self.n_active)
             if self._finished(req, comp):
                 self._retire(slot)
 
@@ -164,6 +176,16 @@ class ContinuousScheduler:
         self.completions.append(occ.comp)
         self.kv.retire(slot)
         self.free.append(slot)
+        if self.recorder is not None:
+            c = occ.comp
+            self.recorder.counter("serve/retired")
+            self.recorder.counter("serve/tokens", len(c.tokens))
+            for gap in c.token_times[1:]:      # [0] is prefill, not a gap
+                self.recorder.observe("serve/token_gap_s", gap)
+            self.recorder.event("serve.retire", rid=c.rid, slot=slot,
+                                tokens=len(c.tokens), truncated=c.truncated,
+                                queue_depth=len(self.queue),
+                                active=self.n_active)
 
     # -- snapshot swap ---------------------------------------------------------
     def poll_snapshot(self) -> Optional[SwapEvent]:
@@ -180,6 +202,13 @@ class ContinuousScheduler:
                        trainer_step=snap.step,
                        load_seconds=time.perf_counter() - t0)
         self.swap_events.append(ev)
+        if self.recorder is not None:
+            self.recorder.counter("serve/swaps")
+            self.recorder.event("serve.swap", step=ev.step,
+                                generation=ev.generation,
+                                trainer_step=ev.trainer_step,
+                                load_seconds=ev.load_seconds,
+                                active=self.n_active)
         return ev
 
     # -- the loop ----------------------------------------------------------------
@@ -192,7 +221,9 @@ class ContinuousScheduler:
         self.step_count += 1
         if not self.slots:
             return self.completions[n_done:]
-        toks = self.kv.decode()
+        from repro.obs.timing import annotate
+        with annotate("obs/decode_step"):
+            toks = self.kv.decode()
         now = time.perf_counter()
         for slot, occ in list(self.slots.items()):
             tok = int(toks[slot])
@@ -208,8 +239,14 @@ class ContinuousScheduler:
         per distinct prompt length, admit, decode, retire) so a subsequent
         timed ``run`` is compile-free.  The caches live on the underlying
         ``SlotKV`` jit wrappers, so warming a *different* scheduler instance
-        does not help.  Resets completion/latency/step accounting."""
-        self.run(list(requests))
+        does not help.  Resets completion/latency/step accounting (the obs
+        recorder is detached for the duration so warmup traffic never
+        reaches the metrics stream)."""
+        rec, self.recorder = self.recorder, None
+        try:
+            self.run(list(requests))
+        finally:
+            self.recorder = rec
         self.completions.clear()
         self.swap_events.clear()
         self.rejected = 0
@@ -228,3 +265,17 @@ class ContinuousScheduler:
                 time.sleep(0.01)     # idle: wait for more work / condition
         self.completions.sort(key=lambda c: c.rid)
         return self.completions
+
+    def latency_summary(self) -> dict:
+        """Per-token latency stats over every completion so far: prefill
+        (first token after admit) and inter-token decode gaps, each as a
+        count/mean/min/max/p50/p95 dict (``repro.obs.stats.summarize``)."""
+        from repro.obs.stats import summarize
+        prefill = [c.token_times[0] for c in self.completions
+                   if c.token_times]
+        gaps = [g for c in self.completions for g in c.token_times[1:]]
+        return {"prefill_s": summarize(prefill),
+                "token_gap_s": summarize(gaps),
+                "completions": len(self.completions),
+                "rejected": self.rejected,
+                "swaps": len(self.swap_events)}

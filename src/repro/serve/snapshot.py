@@ -74,10 +74,11 @@ class SnapshotWatcher:
     """
 
     def __init__(self, publish_dir: str, params_like, *,
-                 min_poll_interval: float = 0.0):
+                 min_poll_interval: float = 0.0, recorder=None):
         self.publish_dir = publish_dir
         self.params_like = params_like
         self.min_poll_interval = min_poll_interval
+        self.recorder = recorder
         self.generation = 0
         self._last_path: Optional[str] = None
         self._last_poll = 0.0
@@ -92,6 +93,7 @@ class SnapshotWatcher:
         path = read_pointer(self.publish_dir)
         if path is None or path == self._last_path:
             return None
+        t0 = time.monotonic()
         try:
             tree = restore(path, {"params": self.params_like})
             step = int(load_extra(path).get("step", -1))
@@ -100,6 +102,10 @@ class SnapshotWatcher:
         self._last_path = path
         self.generation += 1
         params = tree["params"]
+        if self.recorder is not None:
+            self.recorder.event("serve.snapshot_load",
+                                generation=self.generation, step=step,
+                                path=path, seconds=time.monotonic() - t0)
         return Snapshot(params=params, generation=self.generation, path=path,
                         step=step,
                         params_checksum=tree_checksum({"params": params}))

@@ -41,6 +41,7 @@ from __future__ import annotations
 import json
 import os
 import re
+import time
 import zlib
 from typing import Any, NamedTuple, Optional
 
@@ -243,7 +244,7 @@ def save_engine(path: str, *, params, state, step: int, sched_state=None,
 
 
 def restore_engine(path: str, *, params_like, state_like,
-                   sched_like=None) -> EngineCheckpoint:
+                   sched_like=None, recorder=None) -> EngineCheckpoint:
     """Restore a full-engine checkpoint against templates (the freshly
     initialized params/state/sched pytrees of the resuming run)."""
     like = {"params": params_like, "state": state_like}
@@ -254,8 +255,15 @@ def restore_engine(path: str, *, params_like, state_like,
         raise CheckpointError(
             f"{_norm_path(path)!r} is not a full-engine checkpoint "
             f"(extra: {extra!r}); use restore() for plain pytrees")
+    t0 = time.perf_counter()
     tree = restore(path, like)
-    return unpack_engine_state(tree, extra)
+    ckpt = unpack_engine_state(tree, extra)
+    if recorder is not None:
+        recorder.event("checkpoint.restore", step=ckpt.step,
+                       path=_norm_path(path),
+                       seconds=time.perf_counter() - t0,
+                       bytes=os.path.getsize(_norm_path(path)))
+    return ckpt
 
 
 _CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
@@ -296,7 +304,8 @@ class Checkpointer:
     """
 
     def __init__(self, directory: str, every: int = 0, keep: int = 3,
-                 pointer: bool = False, role: Optional[str] = None):
+                 pointer: bool = False, role: Optional[str] = None,
+                 recorder=None):
         if role is None:
             try:
                 role = "write" if jax.process_index() == 0 else "validate"
@@ -308,6 +317,7 @@ class Checkpointer:
         self.keep = keep
         self.pointer = pointer
         self.role = role
+        self.recorder = recorder   # obs: save/restore events, write role only
         self._last = 0
         if role == "write":
             os.makedirs(directory, exist_ok=True)
@@ -337,7 +347,13 @@ class Checkpointer:
         out = self.path(step)
         self._last = int(step)
         if self.role == "write":
+            t0 = time.perf_counter()
             out = save(out, tree, extra=extra)
+            if self.recorder is not None:
+                self.recorder.counter("checkpoint/saves")
+                self.recorder.event("checkpoint.save", step=int(step),
+                                    path=out, seconds=time.perf_counter() - t0,
+                                    bytes=os.path.getsize(out))
             self._barrier(step)                # validators read after this
             if self.pointer:
                 from repro.serve.snapshot import publish_pointer

@@ -59,8 +59,10 @@ def chunk_over_ring(step_fn: Callable, n_batches: int, chunk_steps: int):
             state, params, metrics = step_fn(state, params, batch)
             return (state, params), metrics
 
-        (state, params), stacked = jax.lax.scan(
-            body, (state, params), jnp.arange(chunk_steps, dtype=jnp.int32))
+        with jax.named_scope("obs/chunk_scan"):
+            (state, params), stacked = jax.lax.scan(
+                body, (state, params),
+                jnp.arange(chunk_steps, dtype=jnp.int32))
         return state, params, stacked
 
     return chunk_fn

@@ -214,7 +214,7 @@ def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
           inconsistent: bool = True, isgd_cfg: Optional[ISGDConfig] = None,
           lr_fn: Callable = None, log_every: int = 0,
           eval_fn: Callable = None, eval_every: int = 0,
-          step_sync: bool = False):
+          step_sync: bool = False, observer=None):
     """Simple host loop over FCPR batches (CPU reproduction path).
 
     Metrics are device scalars; converting them to python floats blocks, so
@@ -225,6 +225,9 @@ def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
     boundary is where the host actually observes completion.  Timing studies
     that need true per-step wall deltas (benchmarks/fig8_batch_size.py's
     Eq.21 fit) must pass ``step_sync=True`` to restore the per-step barrier.
+
+    ``observer`` (a ``repro.obs.TrainObserver``) rides the same boundary
+    discipline: deferred per step, ingested only at flushes.
     """
     if isgd_cfg is None:
         isgd_cfg = ISGDConfig(n_batches=sampler.n_batches)
@@ -236,22 +239,26 @@ def train(params, loss_fn, rule, sampler, *, steps: int, lr=0.01,
     state = init_fn(params)
     log = TrainLog()
     evals = []
-    pending = []                              # un-synced (metrics, wall)
+    pending = []                              # un-synced (step, metrics, wall)
     t0 = time.perf_counter()
 
     def flush():
-        for m, w in pending:
+        for j, m, w in pending:
             # un-synced walls are dispatch times, not completion times —
             # record them as estimates so timing fits can refuse them
             log.append(m, w, wall_estimated=not step_sync)
+            if observer is not None:
+                observer.defer(j, m)
         pending.clear()
+        if observer is not None:
+            observer.flush()
 
     for j in range(steps):
         batch = sampler(j)
         state, params, metrics = step_fn(state, params, batch)
         if step_sync:
             jax.block_until_ready(metrics["loss"])
-        pending.append((metrics, time.perf_counter() - t0))
+        pending.append((j, metrics, time.perf_counter() - t0))
         if log_every and (j + 1) % log_every == 0:
             flush()
             print(f"  step {j+1:5d} loss={log.losses[-1]:.4f} "
